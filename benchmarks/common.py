@@ -1,0 +1,22 @@
+"""Shared helpers for the per-table benchmarks."""
+from __future__ import annotations
+
+import time
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    """CSV line per harness contract: name,us_per_call,derived."""
+    print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.dt = time.perf_counter() - self.t0
+
+    @property
+    def us(self) -> float:
+        return self.dt * 1e6

@@ -1,0 +1,80 @@
+"""Beyond-paper extensions (the paper's own future-work items, §6 of the
+paper): load-dependent queueing delay + closed-loop serving simulation.
+
+ext1 — queueing audit: queueing-adjusted delays of each planner's plan
+       (does the load-free plan survive M/G/1-PS inflation?).
+ext2 — queueing-aware planning: AGH on `with_queueing_margin(rho_max)`
+       instances; the explicit headroom / coverage / budget trade-off.
+ext3 — closed-loop validation: discrete-event simulation of the planned
+       fleet under Poisson traffic; achieved SLO attainment vs the
+       planner's analytical delay model.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import agh, default_instance, gh, provisioning_cost
+from repro.core.queueing import (slo_attainment_with_queueing,
+                                 with_queueing_margin)
+from repro.serving.simulator import simulate
+
+from .common import Timer, emit
+
+
+def run() -> None:
+    inst = default_instance()
+    plans = [("GH", gh(inst)), ("AGH", agh(inst))]
+
+    # ext1: queueing audit of load-free plans
+    for name, sol in plans:
+        q = slo_attainment_with_queueing(inst, sol)
+        emit(f"ext1.queue_audit.{name}", 0.0,
+             f"max_rho={q['max_rho']:.3f};"
+             f"viol_load_free={q['violations_load_free']};"
+             f"viol_queueing={q['violations_queueing']};"
+             f"min_margin={q['margin_min']:.2f}")
+
+    # ext2: queueing-aware planning (headroom knob) across budgets
+    for budget in (100.0, 150.0):
+        inst_b = default_instance(budget=budget)
+        with Timer() as t:
+            sol_m = agh(with_queueing_margin(inst_b, rho_max=0.5))
+        q = slo_attainment_with_queueing(inst_b, sol_m)
+        emit(f"ext2.rho_max0.5.budget{int(budget)}", t.us,
+             f"stage1=${provisioning_cost(inst_b, sol_m):.1f};"
+             f"u_max={sol_m.u.max():.3f};"
+             f"viol_queueing={q['violations_queueing']};"
+             f"min_margin={q['margin_min']:.2f}")
+
+    # ext4: carbon-intensity-aware tier costs (paper future-work #3)
+    from repro.core.carbon import carbon_priced, emissions
+    intensity = {n: (0.08 if ("H100" in n or "A100" in n) else 0.55)
+                 for n in inst.tier_names}
+    base_em = emissions(inst, plans[1][1])
+    emit("ext4.carbon.baseline", 0.0,
+         f"emissions={base_em:.1f}kg;stage1=${provisioning_cost(inst, plans[1][1]):.1f}")
+    for cp, extra_budget in ((0.60, 0.0), (0.60, 30.0), (2.00, 60.0)):
+        inst_c = default_instance(budget=100.0 + extra_budget)
+        ci = carbon_priced(inst_c, carbon_price=cp, intensity=intensity)
+        sol_c = agh(ci)
+        emit(f"ext4.carbon.p{cp:.2f}.b{int(100+extra_budget)}", 0.0,
+             f"emissions={emissions(inst_c, sol_c):.1f}kg;"
+             f"stage1=${provisioning_cost(inst_c, sol_c):.1f};"
+             f"u_max={sol_c.u.max():.2f}")
+
+    # ext3: closed-loop simulation (load-free vs margin-planned)
+    inst150 = default_instance(budget=150.0)
+    cases = [("AGH_loadfree", agh(inst), inst),
+             ("AGH_rho0.5_b150", agh(with_queueing_margin(inst150, 0.5)),
+              inst150)]
+    for name, sol, icase in cases:
+        st = simulate(icase, sol, horizon_s=300.0, rate_scale=0.02, seed=1)
+        att = ";".join(f"{icase.query_names[i][:5]}="
+                       f"{100*st.per_type_slo_attain[i]:.0f}%"
+                       for i in range(icase.I))
+        emit(f"ext3.sim.{name}", 0.0,
+             f"served={st.n_served};unmet_planned={sol.u.max():.2f};{att}")
+
+
+if __name__ == "__main__":
+    run()

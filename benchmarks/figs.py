@@ -1,0 +1,102 @@
+"""Figure reproductions (Figs. 2–5): parameter sweeps printed as CSV.
+
+fig2 — budget sensitivity (expected cost & violations vs delta)
+fig3 — uncertainty robustness (stress multiplier alpha on d, e)
+fig4 — unmet-cap sensitivity (u_ub in {1%, 2%, 5%, soft})
+fig5 — stress panels (GH/AGH/DM under 1.0/1.2/1.5x, strict 2% cap) and
+        AGH sensitivity to Delta_i / eps_i scaling (panels d–f)
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import (agh, default_instance, dvr, evaluate, gh, hf, lpr,
+                        solve_milp)
+
+from .common import emit
+
+
+def fig2_budget(S: int = 60, budgets=(72, 75, 80, 90, 100, 120)) -> None:
+    for b in budgets:
+        inst = default_instance(budget=float(b))
+        for name, fn in (("GH", gh), ("AGH", agh), ("HF", hf)):
+            r = evaluate(inst, fn(inst), S=S, u_cap=np.full(6, 0.02))
+            emit(f"fig2.budget{b}.{name}", 0.0,
+                 f"cost=${r.expected_cost:.1f};viol={100*r.violation_rate:.1f}%")
+
+
+def fig3_stress(S: int = 60, alphas=(1.0, 1.1, 1.2, 1.35, 1.5)) -> None:
+    inst = default_instance()
+    plans = [("GH", gh(inst)), ("AGH", agh(inst)), ("LPR", lpr(inst)),
+             ("DVR", dvr(inst)), ("HF", hf(inst))]
+    for alpha in alphas:
+        stressed = inst.stressed(alpha)
+        for name, plan in plans:
+            r = evaluate(stressed, plan, S=S, d_infl=0.0, e_infl=0.0,
+                         u_cap=np.full(6, 0.02))
+            emit(f"fig3.a{alpha:.2f}.{name}", 0.0,
+                 f"cost=${r.expected_cost:.1f};viol={100*r.violation_rate:.1f}%")
+
+
+def fig4_unmet_cap(S: int = 60, caps=(0.01, 0.02, 0.05, 1.0),
+                   include_dm: bool = False) -> None:
+    inst = default_instance()
+    plans = [("GH", gh(inst)), ("AGH", agh(inst)), ("HF", hf(inst))]
+    if include_dm:
+        plans.append(("DM", solve_milp(inst, time_limit=180)))
+    for cap in caps:
+        label = "soft" if cap >= 1.0 else f"{int(cap*100)}pct"
+        for name, plan in plans:
+            r = evaluate(inst, plan, S=S, u_cap=np.full(6, cap))
+            emit(f"fig4.cap_{label}.{name}", 0.0,
+                 f"cost=${r.expected_cost:.1f};viol={100*r.violation_rate:.1f}%")
+
+
+def fig5_stress_panels(S: int = 60, include_dm: bool = True) -> None:
+    inst = default_instance()
+    plans = [("GH", gh(inst)), ("AGH", agh(inst))]
+    if include_dm:
+        plans.append(("DM", solve_milp(inst, time_limit=180)))
+    for alpha in (1.0, 1.2, 1.5):
+        stressed = inst.stressed(alpha)
+        for name, plan in plans:
+            r = evaluate(stressed, plan, S=S, d_infl=0.0, e_infl=0.0,
+                         u_cap=np.full(6, 0.02))
+            emit(f"fig5.stress{alpha:.1f}.{name}", 0.0,
+                 f"cost=${r.expected_cost:.1f};viol={100*r.violation_rate:.1f}%")
+    # (d) delay-SLO vs error-SLO scaling for AGH
+    for dscale in (0.8, 1.0, 1.2):
+        for escale in (0.8, 1.0, 1.2):
+            mod = dataclasses.replace(inst)
+            mod.Delta = inst.Delta * dscale
+            mod.eps = inst.eps * escale
+            mod.__post_init__()
+            sol = agh(mod)
+            from repro.core import objective, provisioning_cost
+            emit(f"fig5d.D{dscale:.1f}.e{escale:.1f}.AGH", 0.0,
+                 f"obj=${objective(mod, sol):.1f};"
+                 f"gpus={int(sol.y.sum())};stage1=${provisioning_cost(mod, sol):.1f}")
+    # (e) rental-price scaling
+    for pscale in (0.75, 1.0, 1.5, 2.0):
+        mod = dataclasses.replace(inst)
+        mod.p_c = inst.p_c * pscale
+        mod.__post_init__()
+        sol = agh(mod)
+        from repro.core import objective
+        pairs = int(np.sum(sol.q))
+        emit(f"fig5e.p{pscale:.2f}.AGH", 0.0,
+             f"obj=${objective(mod, sol):.1f};pairs={pairs};"
+             f"gpus={int(sol.y.sum())}")
+
+
+def run(S: int = 60) -> None:
+    fig2_budget(S=S)
+    fig3_stress(S=S)
+    fig4_unmet_cap(S=S)
+    fig5_stress_panels(S=S)
+
+
+if __name__ == "__main__":
+    run()

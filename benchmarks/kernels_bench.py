@@ -1,0 +1,86 @@
+"""Kernel microbenchmarks: interpret-mode Pallas vs jnp oracle timing +
+flops accounting. (Wall times on CPU are for harness plumbing only — the
+kernels target TPU; correctness is asserted in tests/test_kernels.py.)"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import emit
+
+
+def _time(fn, *args, iters: int = 3) -> float:
+    fn(*args)                       # compile/warm
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run() -> None:
+    rng = np.random.default_rng(0)
+    # flash attention (prefill hot spot)
+    from repro.kernels.flash_attention.ops import flash_attention
+    B, H, KV, T, hd = 1, 4, 2, 512, 64
+    q = jnp.asarray(rng.normal(size=(B, H, T, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, KV, T, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, KV, T, hd)), jnp.float32)
+    flops = 4 * B * H * T * T * hd
+    us_ref = _time(lambda *a: flash_attention(*a, use_pallas=False), q, k, v)
+    emit("kernel.flash_attention.xla_ref", us_ref,
+         f"shape=B{B}H{H}T{T}hd{hd};flops={flops:.2e}")
+    us_pl = _time(lambda *a: flash_attention(*a, use_pallas=True), q, k, v)
+    emit("kernel.flash_attention.pallas_interp", us_pl, "interpret=True")
+
+    # decode attention (bandwidth-bound phase)
+    from repro.kernels.decode_attention.ops import decode_attention
+    G, S = H // KV, 2048
+    q1 = jnp.asarray(rng.normal(size=(B, KV, G, hd)), jnp.float32)
+    kc = jnp.asarray(rng.normal(size=(B, KV, S, hd)), jnp.float32)
+    vc = jnp.asarray(rng.normal(size=(B, KV, S, hd)), jnp.float32)
+    cache_bytes = 2 * B * KV * S * hd * 4
+    us_ref = _time(lambda *a: decode_attention(*a, use_pallas=False),
+                   q1, kc, vc)
+    emit("kernel.decode_attention.xla_ref", us_ref,
+         f"cache_bytes={cache_bytes:.2e}")
+    us_pl = _time(lambda *a: decode_attention(*a, use_pallas=True),
+                  q1, kc, vc)
+    emit("kernel.decode_attention.pallas_interp", us_pl, "interpret=True")
+
+    # ssm scan
+    from repro.kernels.ssm_scan.ops import ssm_scan
+    B2, T2, nh, hp, N = 1, 512, 2, 64, 64
+    x = jnp.asarray(rng.normal(size=(B2, T2, nh, hp)), jnp.float32)
+    Bm = jnp.asarray(rng.normal(size=(B2, T2, N)) * .5, jnp.float32)
+    Cm = jnp.asarray(rng.normal(size=(B2, T2, N)) * .5, jnp.float32)
+    dt = jnp.asarray(rng.uniform(1e-3, .1, (B2, T2, nh)), jnp.float32)
+    A = -jnp.asarray(rng.uniform(.5, 2., (nh,)), jnp.float32)
+    D = jnp.asarray(rng.normal(size=(nh,)), jnp.float32)
+    us_ref = _time(lambda *a: ssm_scan(*a, use_pallas=False),
+                   x, Bm, Cm, dt, A, D)
+    emit("kernel.ssm_scan.xla_ref", us_ref, f"T={T2};state={hp}x{N}")
+    us_pl = _time(lambda *a: ssm_scan(*a, use_pallas=True),
+                  x, Bm, Cm, dt, A, D)
+    emit("kernel.ssm_scan.pallas_interp", us_pl, "interpret=True")
+
+    # rwkv6
+    from repro.kernels.rwkv6_wkv.ops import rwkv6_wkv
+    B3, T3, H3, hd3 = 1, 256, 2, 64
+    r = jnp.asarray(rng.normal(size=(B3, T3, H3, hd3)) * .5, jnp.float32)
+    k3 = jnp.asarray(rng.normal(size=(B3, T3, H3, hd3)) * .5, jnp.float32)
+    v3 = jnp.asarray(rng.normal(size=(B3, T3, H3, hd3)) * .5, jnp.float32)
+    lw = -jnp.exp(jnp.asarray(rng.normal(size=(B3, T3, H3, hd3)) * .5 - 1.5,
+                              jnp.float32))
+    u = jnp.asarray(rng.normal(size=(H3, hd3)) * .5, jnp.float32)
+    us_ref = _time(lambda *a: rwkv6_wkv(*a, use_pallas=False),
+                   r, k3, v3, lw, u)
+    emit("kernel.rwkv6_wkv.xla_ref", us_ref, f"T={T3};state={hd3}x{hd3}")
+    us_pl = _time(lambda *a: rwkv6_wkv(*a, use_pallas=True), r, k3, v3, lw, u)
+    emit("kernel.rwkv6_wkv.pallas_interp", us_pl, "interpret=True")
+
+
+if __name__ == "__main__":
+    run()

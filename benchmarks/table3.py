@@ -1,0 +1,74 @@
+"""Table 3: ablation of the three constraint-aware mechanisms.
+
+Disables each of M1 (feasibility filter), M2 (cost-per-effective-coverage
+ranking), M3 (TP upgrade) in isolation on the default setup and reports
+feasibility + cost. Expected (paper): w/o M1 -> memory violation;
+w/o M3 -> delay violation; w/o M2 -> feasible but ~+50% cost.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import default_instance, feasibility, objective
+from repro.core.agh import agh
+from repro.core.gh import greedy_heuristic
+
+from .common import Timer, emit
+
+
+def _agh_like(inst, ablation: frozenset):
+    """Multi-start GH with the given ablation (local search preserves
+    feasibility by construction, so ablation effects show in construction)."""
+    best, best_obj = None, np.inf
+    for key in (np.argsort(-inst.lam), np.argsort(inst.lam),
+                np.argsort(-inst.phi), np.argsort(inst.eps)):
+        sol, _ = greedy_heuristic(inst, order=key, ablation=ablation)
+        obj = objective(inst, sol)
+        if obj < best_obj:
+            best, best_obj = sol, obj
+    return best
+
+
+def _ablate(inst, label: str) -> list[dict]:
+    rows = []
+    variants = [("all_M1-M3", frozenset()),
+                ("wo_M1", frozenset({"no_m1"})),
+                ("wo_M2", frozenset({"no_m2"})),
+                ("wo_M3", frozenset({"no_m3"}))]
+    base_cost = None
+    for name, abl in variants:
+        with Timer() as t:
+            sol = (agh(inst) if not abl else _agh_like(inst, abl))
+        v = feasibility(inst, sol, enforce_zeta=False)
+        bad = {k: round(val, 4) for k, val in v.items() if val > 1e-4}
+        feasible = not bad
+        cost = objective(inst, sol)
+        if name == "all_M1-M3":
+            base_cost = cost
+        delta = ""
+        if feasible and base_cost:
+            delta = f"{100 * (cost / base_cost - 1):+.0f}%"
+        rows.append(dict(variant=name, feasible=feasible,
+                         cost=round(cost, 2), violations=bad, delta=delta))
+        emit(f"table3{label}.{name}", t.us,
+             f"feasible={feasible};cost=${cost:.2f};viol={list(bad)};"
+             f"delta={delta}")
+    return rows
+
+
+def run() -> list[dict]:
+    rows = _ablate(default_instance(), "")
+    # Strict-accuracy variant: ImageGen eps tightened so only 34B+ at
+    # FP16/INT8 is admissible — the big-model-on-small-tier conflict the
+    # paper's M1 guards against (in the default calibration INT4 shrinks
+    # the 34B under the 24 GB tier, so M1's removal shows as cost, not a
+    # memory violation).
+    strict = default_instance()
+    strict.eps[4] = 0.0125
+    strict.__post_init__()
+    rows += _ablate(strict, ".strict")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,48 @@
+"""Table 6: runtime scaling with problem size (I, J, K).
+
+Paper: DM exceeds 600 s at (15,15,10); GH < 1 s and AGH < 3 s everywhere
+(>= 260x speedup at (20,20,20))."""
+from __future__ import annotations
+
+from repro.core import agh, gh, objective, random_instance, solve_milp
+
+from .common import Timer, emit
+
+SIZES = [(4, 4, 5), (6, 6, 10), (10, 10, 10), (15, 15, 10), (20, 20, 20)]
+
+
+def run(dm_limit: float = 600.0, dm_max_size: int = 1000,
+        sizes=SIZES) -> list[dict]:
+    rows = []
+    for (I, J, K) in sizes:
+        inst = random_instance(I, J, K, seed=42)
+        row = dict(size=f"({I},{J},{K})")
+        g = gh(inst)
+        row["GH_s"] = round(g.runtime_s, 3)
+        a = agh(inst)
+        row["AGH_s"] = round(a.runtime_s, 3)
+        row["AGH_obj"] = round(objective(inst, a), 1)
+        if I * J * K <= dm_max_size:
+            d = solve_milp(inst, time_limit=dm_limit)
+            row["DM_s"] = round(d.runtime_s, 2)
+            row["DM_obj"] = (round(objective(inst, d), 1)
+                             if d.method == "DM" else "timeout")
+            if d.method == "DM":
+                row["AGH_gap_pct"] = round(
+                    100 * (row["AGH_obj"] - row["DM_obj"])
+                    / max(row["DM_obj"], 1e-9), 2)
+        else:
+            row["DM_s"] = f">{dm_limit:.0f} (skipped)"
+        rows.append(row)
+        emit(f"table6.{row['size']}", row["AGH_s"] * 1e6,
+             ";".join(f"{k}={v}" for k, v in row.items() if k != "size"))
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dm-limit", type=float, default=600.0)
+    ap.add_argument("--dm-max-size", type=int, default=10**9)
+    args = ap.parse_args()
+    run(dm_limit=args.dm_limit, dm_max_size=args.dm_max_size)

@@ -1,0 +1,26 @@
+# The paper's primary contribution: joint model selection, heterogeneous
+# GPU provisioning, (TP, PP) parallelism configuration, and workload routing
+# for SLO-constrained LLM inference — exact MILP (P_DM) plus the
+# constraint-aware GH / AGH heuristics built on mechanisms M1–M3.
+from .agh import agh
+from .baselines import dvr, hf, lpr
+from .evaluate import EvalResult, evaluate
+from .gh import gh, greedy_heuristic
+from .instance import Instance, default_instance, random_instance
+from .mechanisms import State, m1_select, m3_upgrade
+from .milp import solve_milp
+from .queueing import (queueing_delay, slo_attainment_with_queueing,
+                       utilization, with_queueing_margin)
+from .rolling import RollingResult, rolling, volatility_study
+from .solution import (Solution, cost_terms, feasibility, is_feasible,
+                       objective, proc_delay, provisioning_cost)
+from .stage2 import stage2_cost, stage2_lp
+
+__all__ = [
+    "agh", "dvr", "hf", "lpr", "EvalResult", "evaluate", "gh",
+    "greedy_heuristic", "Instance", "default_instance", "random_instance",
+    "State", "m1_select", "m3_upgrade", "solve_milp", "RollingResult",
+    "rolling", "volatility_study", "Solution", "cost_terms", "feasibility",
+    "is_feasible", "objective", "proc_delay", "provisioning_cost",
+    "stage2_cost", "stage2_lp",
+]

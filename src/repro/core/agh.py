@@ -1,0 +1,249 @@
+"""Adaptive Greedy Heuristic (AGH) — paper Algorithm 2.
+
+Enhancements over GH:
+  * multi-start construction: 8 deterministic orderings (ascending/descending
+    each of lambda_i, phi_i, per-type weight-footprint proxy, and error
+    tightness eps_i) plus R adaptive random permutations (Remark 2:
+    R = 3 / 5 / 10 / 20 by problem scale N = I*J*K), early stop after five
+    consecutive non-improving orderings;
+  * relocate local search (L = 3 passes): move committed (i,j,k) fractions to
+    alternative pairs when feasible and strictly improving;
+  * consolidation: drain lightly loaded active pairs onto other active pairs
+    and deactivate them when feasible and strictly improving.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from .gh import greedy_heuristic
+from .instance import Instance
+from .mechanisms import State, commit, m1_select, max_commit
+from .solution import Solution, is_feasible, objective
+
+
+def _orderings(inst: Instance, R: int, rng: np.random.Generator) -> list[np.ndarray]:
+    lam, phi, eps = inst.lam, inst.phi, inst.eps
+    # Per-type weight-footprint proxy: smallest model whose FP16 error meets
+    # the type's SLO ("B_j as it appears for that type").
+    bproxy = np.empty(inst.I)
+    for i in range(inst.I):
+        ok = np.where(inst.e_base[i] <= inst.eps[i])[0]
+        bproxy[i] = inst.B[ok].min() if len(ok) else inst.B.max()
+    keys = [lam, phi, bproxy, eps]
+    orders = []
+    for key in keys:
+        orders.append(np.argsort(key))
+        orders.append(np.argsort(-key))
+    for _ in range(R):
+        orders.append(rng.permutation(inst.I))
+    return orders
+
+
+def _adaptive_R(inst: Instance) -> int:
+    N = inst.I * inst.J * inst.K
+    if N > 5000:
+        return 3
+    if N > 2000:
+        return 5
+    if N > 500:
+        return 10
+    return 20
+
+
+# ---------------------------------------------------------------------------
+# Local search
+# ---------------------------------------------------------------------------
+
+def _rebuild_state(inst: Instance, sol: Solution) -> State:
+    st = State.fresh(inst)
+    st.x = sol.x.copy()
+    st.y = sol.y.copy()
+    st.q = sol.q.copy()
+    st.z = sol.z.copy()
+    st.cfg = np.where(sol.q > 0.5, np.argmax(sol.w, axis=2), -1)
+    st.r_rem = np.clip(1.0 - sol.x.sum(axis=(1, 2)), 0.0, None)
+    st.E_used = np.einsum("ijk,ijk->i", inst.e_bar, sol.x)
+    xw = sol.x[:, :, :, None] * sol.w[None, :, :, :]
+    st.D_used = np.einsum("ijkc,ijkc->i", xw, inst.D_cfg)
+    from .instance import KB_PER_GB
+    data = inst.Delta_T * inst.p_s * float(np.sum(
+        inst.theta[:, None, None] / KB_PER_GB * inst.r[:, None, None]
+        * inst.lam[:, None, None] * sol.x))
+    st.spend = (inst.Delta_T * float(np.sum(inst.p_c[None, :] * sol.y))
+                + inst.Delta_T * inst.p_s * float(np.sum(inst.B[None, :, None] * sol.z))
+                + data)
+    st.uncovered = set()
+    return st
+
+
+def _solution_from_state(inst: Instance, st: State) -> Solution:
+    sol = Solution.empty(inst)
+    sol.x, sol.y, sol.q, sol.z = st.x, st.y, st.q, st.z
+    sol.u = np.clip(st.r_rem, 0.0, None)
+    for j in range(inst.J):
+        for k in range(inst.K):
+            if st.q[j, k] > 0.5 and st.cfg[j, k] >= 0:
+                sol.w[j, k, int(st.cfg[j, k])] = 1.0
+    return sol
+
+
+def _try_move(inst: Instance, sol: Solution, i: int, j: int, k: int,
+              j2: int, k2: int, best_obj: float) -> Solution | None:
+    """Move all of x[i,j,k] to (j2,k2); accept if feasible & improving."""
+    frac = sol.x[i, j, k]
+    trial = sol.copy()
+    trial.x[i, j, k] = 0.0
+    trial.z[i, j, k] = 0.0
+    # Deactivate (j,k) if nothing else uses it.
+    if trial.x[:, j, k].sum() <= 1e-12:
+        trial.q[j, k] = 0.0
+        trial.y[j, k] = 0.0
+        trial.w[j, k, :] = 0.0
+        trial.z[:, j, k] = 0.0
+    st = _rebuild_state(inst, trial)
+    if st.q[j2, k2] > 0.5:
+        c = int(st.cfg[j2, k2])
+        if inst.D_cfg[i, j2, k2, c] > inst.Delta[i]:
+            return None
+    else:
+        c = m1_select(inst, i, j2, k2)
+        if c is None:
+            return None
+    if max_commit(st, i, j2, k2, c) < frac - 1e-9:
+        return None
+    commit(st, i, j2, k2, c, frac)
+    cand = _solution_from_state(inst, st)
+    if not is_feasible(inst, cand, enforce_zeta=False):
+        return None
+    if objective(inst, cand) < best_obj - 1e-9:
+        return cand
+    return None
+
+
+def _move_targets(inst: Instance, sol: Solution, i: int,
+                  n_inactive: int = 3) -> list[tuple[int, int]]:
+    """Candidate destinations for relocating type i: every ACTIVE pair plus
+    the few cheapest inactive pairs that pass M1 for this type. (The paper
+    scans all (j', k'); restricting to this set is what keeps the pure-
+    Python relocate within the paper's runtime envelope — the optimum of
+    a move almost always shares or cheaply activates.)"""
+    active = [(j, k) for j in range(inst.J) for k in range(inst.K)
+              if sol.q[j, k] > 0.5]
+    inactive = []
+    for j in range(inst.J):
+        for k in range(inst.K):
+            if sol.q[j, k] > 0.5:
+                continue
+            c = m1_select(inst, i, j, k)
+            if c is None or inst.e_bar[i, j, k] > inst.eps[i]:
+                continue
+            inactive.append((inst.p_c[k] * inst.nm[c], j, k))
+    inactive.sort()
+    return active + [(j, k) for _, j, k in inactive[:n_inactive]]
+
+
+def _relocate(inst: Instance, sol: Solution, L: int) -> Solution:
+    for _ in range(L):
+        improved = False
+        obj = objective(inst, sol)
+        for i in range(inst.I):
+            assigned = [(j, k) for j in range(inst.J) for k in range(inst.K)
+                        if sol.x[i, j, k] > 1e-9]
+            for (j, k) in assigned:
+                for (j2, k2) in _move_targets(inst, sol, i):
+                    if (j2, k2) == (j, k):
+                        continue
+                    cand = _try_move(inst, sol, i, j, k, j2, k2, obj)
+                    if cand is not None:
+                        sol = cand
+                        obj = objective(inst, sol)
+                        improved = True
+                        break
+        if not improved:
+            break
+    return sol
+
+
+def _consolidate(inst: Instance, sol: Solution) -> Solution:
+    """Drain lightly loaded pairs onto other active pairs (Alg. 2 l.10–12)."""
+    while True:
+        active = [(float(sol.y[j, k]), j, k)
+                  for j in range(inst.J) for k in range(inst.K)
+                  if sol.q[j, k] > 0.5]
+        active.sort()
+        improved = False
+        for _, j, k in active:
+            types = [i for i in range(inst.I) if sol.x[i, j, k] > 1e-9]
+            trial = sol.copy()
+            obj = objective(inst, sol)
+            ok = True
+            for i in types:
+                frac = trial.x[i, j, k]
+                trial.x[i, j, k] = 0.0
+                trial.z[i, j, k] = 0.0
+                st = _rebuild_state(inst, trial)
+                st.q[j, k] = 0.0  # forbid re-landing on the pair being drained
+                placed = False
+                for j2 in range(inst.J):
+                    for k2 in range(inst.K):
+                        if (j2, k2) == (j, k) or st.q[j2, k2] < 0.5:
+                            continue
+                        c = int(st.cfg[j2, k2])
+                        if inst.D_cfg[i, j2, k2, c] > inst.Delta[i]:
+                            continue
+                        if max_commit(st, i, j2, k2, c) >= frac - 1e-9:
+                            commit(st, i, j2, k2, c, frac)
+                            trial = _solution_from_state(inst, st)
+                            placed = True
+                            break
+                    if placed:
+                        break
+                if not placed:
+                    ok = False
+                    break
+            if not ok:
+                continue
+            trial.q[j, k] = 0.0
+            trial.y[j, k] = 0.0
+            trial.w[j, k, :] = 0.0
+            trial.z[:, j, k] = 0.0
+            if (is_feasible(inst, trial, enforce_zeta=False)
+                    and objective(inst, trial) < obj - 1e-9):
+                sol = trial
+                improved = True
+                break
+        if not improved:
+            return sol
+
+
+# ---------------------------------------------------------------------------
+# AGH driver
+# ---------------------------------------------------------------------------
+
+def agh(inst: Instance, R: int | None = None, L: int = 3, seed: int = 0,
+        patience: int = 5) -> Solution:
+    t0 = time.perf_counter()
+    rng = np.random.default_rng(seed)
+    if R is None:
+        R = _adaptive_R(inst)
+    best: Solution | None = None
+    best_obj = np.inf
+    stale = 0
+    for order in _orderings(inst, R, rng):
+        sol, _ = greedy_heuristic(inst, order=order)
+        sol = _relocate(inst, sol, L)
+        sol = _consolidate(inst, sol)
+        obj = objective(inst, sol)
+        if obj < best_obj - 1e-9:
+            best, best_obj = sol, obj
+            stale = 0
+        else:
+            stale += 1
+            if stale >= patience:
+                break
+    assert best is not None
+    best.runtime_s = time.perf_counter() - t0
+    best.method = "AGH"
+    return best

@@ -1,0 +1,131 @@
+"""Greedy Heuristic (GH) — paper Algorithm 1.
+
+Phase 1 (coverage pre-allocation): greedy set-cover that activates one
+(model, tier) pair at a time, maximizing uncovered-types-covered per dollar
+of horizon rental, until every type is covered or the Phase-1 budget cap
+(beta * delta, beta = 0.8) is reached.
+
+Phase 2 (sequential allocation): processes query types in a given order
+(default: descending arrival rate), ranking candidates with M2 and committing
+traffic with full (8f)-(8h) + budget verification.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from .instance import Instance
+from .mechanisms import (State, commit, m1_select, m3_upgrade, marginal_cost,
+                         max_commit, rank_key)
+from .solution import Solution
+
+
+def _phase1(st: State) -> None:
+    inst = st.inst
+    while st.uncovered and st.spend < inst.phase1_beta * inst.delta:
+        best = None  # (score, j, k, cfg_idx, nm, members)
+        for j in range(inst.J):
+            for k in range(inst.K):
+                if st.q[j, k] > 0.5:
+                    continue
+                members, worst_c, worst_nm = [], None, 0
+                for i in sorted(st.uncovered):
+                    c = m1_select(inst, i, j, k, ablation=st.ablation)
+                    if c is None or inst.e_bar[i, j, k] > inst.eps[i]:
+                        continue
+                    members.append(i)
+                    if inst.nm[c] > worst_nm:
+                        worst_nm, worst_c = int(inst.nm[c]), c
+                if not members:
+                    continue
+                cost = inst.Delta_T * inst.p_c[k] * worst_nm   # eq. (14)
+                if st.spend + cost > inst.phase1_beta * inst.delta:
+                    continue
+                score = len(members) / cost
+                if best is None or score > best[0]:
+                    best = (score, j, k, worst_c, worst_nm, members)
+        if best is None:
+            break
+        _, j, k, c, nm, members = best
+        st.q[j, k] = 1.0
+        st.cfg[j, k] = c
+        st.y[j, k] = nm
+        st.spend += inst.Delta_T * inst.p_c[k] * nm
+        for i in members:
+            st.uncovered.discard(i)
+
+
+def _phase2(st: State, order: np.ndarray) -> None:
+    inst = st.inst
+    for i in order:
+        i = int(i)
+        cands: list[tuple[tuple[int, float], int, int, int]] = []
+        for j in range(inst.J):
+            for k in range(inst.K):
+                if st.q[j, k] > 0.5:
+                    c = int(st.cfg[j, k])
+                    if inst.D_cfg[i, j, k, c] > inst.Delta[i]:
+                        if "no_m3" in st.ablation:
+                            pass                           # route anyway
+                        else:
+                            c2 = m3_upgrade(st, i, j, k)   # M3
+                            if c2 is None:
+                                continue
+                            c = c2
+                else:
+                    c0 = m1_select(inst, i, j, k,
+                                   ablation=st.ablation)   # M1
+                    if c0 is None:
+                        continue
+                    c = c0
+                key = rank_key(st, i, j, k, c)             # M2
+                if not np.isfinite(key[1]):
+                    continue
+                cands.append((key, j, k, c))
+        cands.sort(key=lambda t: t[0])
+        for key, j, k, c in cands:
+            if st.r_rem[i] <= 1e-9:
+                break
+            # Re-validate under the *current* state (the pair may have been
+            # upgraded while serving an earlier candidate of this type).
+            if st.q[j, k] > 0.5 and c != st.cfg[j, k] and inst.nm[c] <= st.y[j, k]:
+                c_use = int(st.cfg[j, k])
+                if inst.D_cfg[i, j, k, c_use] > inst.Delta[i]:
+                    continue
+            else:
+                c_use = c
+            frac = min(st.r_rem[i], max_commit(st, i, j, k, c_use))
+            if frac <= 1e-9:
+                continue
+            commit(st, i, j, k, c_use, frac)
+
+
+def greedy_heuristic(inst: Instance, order: np.ndarray | None = None,
+                     run_phase1: bool = True,
+                     ablation: frozenset = frozenset()) -> Solution:
+    """Single-pass GH (Algorithm 1). `order` overrides the Phase-2 query
+    ordering (used by AGH's multi-start); default is descending lambda.
+    `ablation` disables mechanisms for the Table-3 study."""
+    t0 = time.perf_counter()
+    st = State.fresh(inst, ablation=ablation)
+    if run_phase1:
+        _phase1(st)
+    if order is None:
+        order = np.argsort(-inst.lam)
+    _phase2(st, np.asarray(order))
+    sol = Solution.empty(inst)
+    sol.x, sol.y, sol.q, sol.z = st.x, st.y, st.q, st.z
+    sol.u = np.clip(st.r_rem, 0.0, None)
+    for j in range(inst.J):
+        for k in range(inst.K):
+            if st.q[j, k] > 0.5 and st.cfg[j, k] >= 0:
+                sol.w[j, k, int(st.cfg[j, k])] = 1.0
+    sol.runtime_s = time.perf_counter() - t0
+    sol.method = "GH"
+    return sol, st
+
+
+def gh(inst: Instance, **kw) -> Solution:
+    sol, _ = greedy_heuristic(inst, **kw)
+    return sol

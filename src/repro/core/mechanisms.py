@@ -1,0 +1,250 @@
+"""The three constraint-aware mechanisms shared by GH and AGH (paper §4.1).
+
+M1 — TP-aware feasibility selection (eq. 9): for candidate (i,j,k), pick the
+     cheapest (TP,PP) that simultaneously fits per-device memory and the
+     delay SLO; discard the candidate if none exists.
+M2 — cost-per-effective-coverage ranking (eqs. 10–11): rank candidates by
+     incremental cost per unit of traffic they can actually absorb within
+     the remaining error/delay budgets, with a full-coverage tie-breaker.
+M3 — TP upgrade on active pairs (eq. 12): before activating a fresh pair,
+     try a higher-parallelism configuration on an already-active pair,
+     paying only the incremental GPU cost.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .instance import Instance, KB_PER_GB
+
+
+@dataclasses.dataclass
+class State:
+    """Running construction state (paper §4, 'Running state')."""
+    inst: Instance
+    x: np.ndarray          # [I,J,K]
+    y: np.ndarray          # [J,K]
+    q: np.ndarray          # [J,K]
+    cfg: np.ndarray        # [J,K] config index, -1 if inactive
+    z: np.ndarray          # [I,J,K]
+    r_rem: np.ndarray      # [I] remaining unserved fraction (tilde r)
+    E_used: np.ndarray     # [I] cumulative error
+    D_used: np.ndarray     # [I] cumulative delay
+    spend: float           # committed budget $
+    uncovered: set[int]    # I^unc
+    # Ablation switches (paper Table 3): subsets of
+    # {"no_m1", "no_m2", "no_m3"}; used ONLY by the ablation benchmark.
+    ablation: frozenset = frozenset()
+
+    @staticmethod
+    def fresh(inst: Instance, ablation: frozenset = frozenset()) -> "State":
+        I, J, K = inst.I, inst.J, inst.K
+        return State(inst=inst, x=np.zeros((I, J, K)), y=np.zeros((J, K)),
+                     q=np.zeros((J, K)), cfg=-np.ones((J, K), dtype=int),
+                     z=np.zeros((I, J, K)), r_rem=np.ones(I),
+                     E_used=np.zeros(I), D_used=np.zeros(I), spend=0.0,
+                     uncovered=set(range(I)), ablation=ablation)
+
+
+# ---------------------------------------------------------------------------
+# M1
+# ---------------------------------------------------------------------------
+
+def m1_select(inst: Instance, i: int, j: int, k: int,
+              ablation: frozenset = frozenset()) -> int | None:
+    """Cheapest feasible config index for (i,j,k) per eq. (9), else None."""
+    if "no_m1" in ablation:
+        # Cost-only: always "select" the cheapest config (nm = 1) without
+        # the memory/delay filter (paper Table 3: memory violation).
+        return int(np.argmin(inst.nm))
+    best, best_nm, best_d = None, np.inf, np.inf
+    for c, (n, m) in enumerate(inst.configs):
+        nm = n * m
+        if inst.B_eff[j, k] / nm > inst.C_gpu[k]:
+            continue
+        d = inst.D_cfg[i, j, k, c]
+        if d > inst.Delta[i]:
+            continue
+        if nm < best_nm or (nm == best_nm and d < best_d):
+            best, best_nm, best_d = c, nm, d
+    return best
+
+
+# ---------------------------------------------------------------------------
+# M3
+# ---------------------------------------------------------------------------
+
+def m3_upgrade(st: State, i: int, j: int, k: int) -> int | None:
+    """Smallest config with nm > y_jk meeting the delay SLO within budget
+    (eq. 12). Returns the config index or None."""
+    inst = st.inst
+    y_cur = st.y[j, k]
+    best, best_nm = None, np.inf
+    for c, (n, m) in enumerate(inst.configs):
+        nm = n * m
+        if nm <= y_cur or nm >= best_nm:
+            continue
+        if inst.B_eff[j, k] / nm > inst.C_gpu[k]:
+            continue
+        if inst.D_cfg[i, j, k, c] > inst.Delta[i]:
+            continue
+        inc_cost = inst.Delta_T * inst.p_c[k] * (nm - y_cur)
+        if st.spend + inc_cost > inst.delta:
+            continue
+        # Upgrading the pair's config re-times every type already routed to
+        # it; require the new config to keep all of them within their SLO.
+        if st.cfg[j, k] >= 0 and not _retime_ok(st, j, k, c):
+            continue
+        best, best_nm = c, nm
+    return best
+
+
+def _retime_ok(st: State, j: int, k: int, c_new: int) -> bool:
+    inst = st.inst
+    c_old = st.cfg[j, k]
+    for i2 in range(inst.I):
+        if st.x[i2, j, k] <= 1e-12:
+            continue
+        d_new = (st.D_used[i2]
+                 + (inst.D_cfg[i2, j, k, c_new] - inst.D_cfg[i2, j, k, c_old])
+                 * st.x[i2, j, k])
+        if d_new > inst.Delta[i2] + 1e-9:
+            return False
+    return True
+
+
+# ---------------------------------------------------------------------------
+# M2 (plus the constraint checks of GH Step 4)
+# ---------------------------------------------------------------------------
+
+def effective_coverage(st: State, i: int, j: int, k: int, c: int) -> float:
+    """x̄ per eq. (11): min of remaining demand, error slack, delay slack."""
+    inst = st.inst
+    e = inst.e_bar[i, j, k]
+    d = inst.D_cfg[i, j, k, c]
+    err_cap = (inst.eps[i] - st.E_used[i]) / max(e, 1e-12)
+    del_cap = (inst.Delta[i] - st.D_used[i]) / max(d, 1e-12)
+    if "no_m3" in st.ablation:
+        # Ablated variant routes on whatever parallelism exists, blind to
+        # the accumulated delay (paper Table 3: delay violation).
+        del_cap = st.r_rem[i]
+    return float(min(st.r_rem[i], err_cap, del_cap))
+
+
+def marginal_cost(st: State, i: int, j: int, k: int, c: int) -> float:
+    """c^k_ij per eq. (10): incremental rental + storage + delay penalty."""
+    inst = st.inst
+    nm = inst.nm[c]
+    inc_gpus = max(0.0, nm - st.y[j, k])
+    data_gb = inst.theta[i] / KB_PER_GB * inst.r[i] * inst.lam[i]
+    return (inst.Delta_T * (inst.p_c[k] * inc_gpus
+                            + inst.p_s * (inst.B[j] + data_gb))
+            + inst.rho[i] * inst.D_cfg[i, j, k, c] * 1e3)
+
+
+def rank_key(st: State, i: int, j: int, k: int, c: int) -> tuple[int, float]:
+    """M2 lexicographic key (pi, kappa)."""
+    xbar = effective_coverage(st, i, j, k, c)
+    if xbar <= 1e-9:
+        return (2, np.inf)
+    if "no_m2" in st.ablation:
+        # Raw-cost ranking, no effective-coverage normalization, no
+        # full-coverage tie-breaker (paper Table 3: ~+50% cost).
+        return (0, marginal_cost(st, i, j, k, c))
+    pi = int(xbar < st.r_rem[i] - 1e-9)
+    kappa = marginal_cost(st, i, j, k, c) / xbar
+    return (pi, kappa)
+
+
+# ---------------------------------------------------------------------------
+# Commit machinery (GH Phase-2 Step 4): verify (8f)-(8h) + budget, commit.
+# ---------------------------------------------------------------------------
+
+def _kv_tokens(st: State, j: int, k: int, extra_i: int | None = None,
+               extra_x: float = 0.0) -> float:
+    inst = st.inst
+    t = float(np.sum(inst.r * inst.T_res[:, j, k] * st.x[:, j, k]))
+    if extra_i is not None:
+        t += inst.r[extra_i] * inst.T_res[extra_i, j, k] * extra_x
+    return t
+
+
+def max_commit(st: State, i: int, j: int, k: int, c: int) -> float:
+    """Largest additional fraction of type-i traffic committable to (j,k)
+    at config c without violating (8f) memory, (8g) compute, (8h) storage,
+    or the budget (8c)."""
+    inst = st.inst
+    nm = float(inst.nm[c])
+    cap = effective_coverage(st, i, j, k, c)
+    # (8f): per-device memory headroom -> token budget -> x budget.
+    if "no_m1" in st.ablation:
+        pass  # ablated: commit blindly past the memory budget
+    elif inst.kv_applicable[j]:
+        head_gb = inst.C_gpu[k] - inst.B_eff[j, k] / nm \
+            - (inst.beta[j] / KB_PER_GB) / nm * _kv_tokens(st, j, k)
+        per_x = (inst.beta[j] / KB_PER_GB) / nm \
+            * inst.r[i] * inst.T_res[i, j, k]
+        if per_x > 1e-18:
+            cap = min(cap, head_gb / per_x)
+        elif head_gb < 0:
+            return 0.0
+    else:
+        if inst.C_gpu[k] - inst.B_eff[j, k] / nm < 0:
+            return 0.0
+    # (8g): compute headroom of the y GPUs this config provides.
+    load = float(np.sum(inst.alpha[:, j, k] * inst.r * inst.lam / 1e3
+                        * st.x[:, j, k]))
+    comp_cap = inst.eta * 3600.0 * inst.P_gpu[k] * nm
+    per_x = inst.alpha[i, j, k] * inst.r[i] * inst.lam[i] / 1e3
+    if per_x > 1e-18:
+        cap = min(cap, (comp_cap - load) / per_x)
+    # (8h): storage headroom for type i.
+    stor_used = float(np.sum(inst.B[None, :, None] * st.z[i])
+                      + np.sum(inst.theta[i] / KB_PER_GB * inst.r[i]
+                               * inst.lam[i] * st.x[i]))
+    new_weight = inst.B[j] if st.z[i, j, k] < 0.5 else 0.0
+    per_x = inst.theta[i] / KB_PER_GB * inst.r[i] * inst.lam[i]
+    if per_x > 1e-18:
+        cap = min(cap, (inst.C_s - stor_used - new_weight) / per_x)
+    # budget (8c): incremental rental + data storage per unit x.
+    inc_gpus = max(0.0, inst.nm[c] - st.y[j, k])
+    fixed = inst.Delta_T * (inst.p_c[k] * inc_gpus
+                            + (inst.p_s * inst.B[j] if st.z[i, j, k] < 0.5 else 0.0))
+    per_x = inst.Delta_T * inst.p_s * inst.theta[i] / KB_PER_GB \
+        * inst.r[i] * inst.lam[i]
+    if st.spend + fixed > inst.delta:
+        return 0.0
+    if per_x > 1e-18:
+        cap = min(cap, (inst.delta - st.spend - fixed) / per_x)
+    return max(0.0, float(cap))
+
+
+def commit(st: State, i: int, j: int, k: int, c: int, frac: float) -> None:
+    """Apply an accepted assignment to the running state."""
+    inst = st.inst
+    if frac <= 0:
+        return
+    nm = int(inst.nm[c])
+    inc_gpus = max(0, nm - int(st.y[j, k]))
+    new_adm = st.z[i, j, k] < 0.5
+    # Config change re-times previously routed traffic on this pair.
+    c_old = int(st.cfg[j, k])
+    if c_old >= 0 and c_old != c:
+        for i2 in range(inst.I):
+            if st.x[i2, j, k] > 1e-12:
+                st.D_used[i2] += (inst.D_cfg[i2, j, k, c]
+                                  - inst.D_cfg[i2, j, k, c_old]) * st.x[i2, j, k]
+    st.x[i, j, k] += frac
+    st.z[i, j, k] = 1.0
+    st.q[j, k] = 1.0
+    st.cfg[j, k] = c
+    st.y[j, k] = nm
+    st.r_rem[i] = max(0.0, st.r_rem[i] - frac)
+    st.E_used[i] += inst.e_bar[i, j, k] * frac
+    st.D_used[i] += inst.D_cfg[i, j, k, c] * frac
+    st.spend += inst.Delta_T * (
+        inst.p_c[k] * inc_gpus
+        + (inst.p_s * inst.B[j] if new_adm else 0.0)
+        + inst.p_s * inst.theta[i] / KB_PER_GB * inst.r[i] * inst.lam[i] * frac)
+    st.uncovered.discard(i)

@@ -1,0 +1,105 @@
+"""Rolling-horizon adaptation study (paper §5.3).
+
+Two complementary settings:
+  * synthetic geometric-random-walk volatility (Table 4);
+  * diurnal trace replay (Table 5 / Fig. 6).
+
+Static variants solve Stage 1 once at t=0; the 5-minute variants re-optimize
+the deployment each window with an EWMA demand forecast and a keep-best rule
+(adopt the new plan only if it improves the forecast objective). In every
+window, the current deployment is operated through the exact Stage-2 routing
+LP with the strict per-type unmet cap u_i <= 0.02 (the stress protocol).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import numpy as np
+
+from .instance import Instance
+from .solution import Solution, objective, provisioning_cost
+from .stage2 import stage2_cost, stage2_lp
+from .trace import random_walk_lambdas
+
+STRICT_CAP = 0.02
+
+
+@dataclasses.dataclass
+class RollingResult:
+    method: str
+    mean_window_cost: float
+    total_cost: float
+    violation_rate: float
+    per_window_cost: np.ndarray
+    replans: int = 0
+
+
+def _window_cost(inst_w: Instance, deploy: Solution,
+                 rental_per_window: float) -> tuple[float, int]:
+    cap = np.full(inst_w.I, STRICT_CAP)
+    sol, _ = stage2_lp(inst_w, deploy, u_cap=cap)
+    # Stage-2 penalties accrue per window: scale horizon-priced terms down.
+    op = stage2_cost(inst_w, sol) / inst_w.Delta_T * (24.0 / 288.0)
+    viol = int(np.sum(sol.u > 0.01))
+    return rental_per_window + op * inst_w.Delta_T, viol
+
+
+def rolling(inst0: Instance, lam_path: np.ndarray,
+            planner: Callable[[Instance], Solution],
+            replan_every: int | None = None,
+            forecast_ewma: float = 0.4,
+            static_forecast: str = "first") -> RollingResult:
+    """Replay `lam_path` ([T, I] arrivals). If `replan_every` is None the
+    Stage-1 plan is held fixed (static); otherwise the planner re-runs
+    every `replan_every` windows on an EWMA forecast with keep-best.
+    static_forecast: 'first' plans on the first window's demand (synthetic
+    GRW study — the walk starts at the forecast); 'mean' plans on the
+    day-average (the paper's protocol for the diurnal trace replay).
+    """
+    T = lam_path.shape[0]
+    window_h = 24.0 / T
+    lam_fc = (lam_path.mean(axis=0) if static_forecast == "mean"
+              else lam_path[0])
+    deploy = planner(inst0.with_lam(lam_fc))
+    best_forecast_obj = objective(inst0.with_lam(lam_fc), deploy)
+    rental_w = provisioning_cost(inst0, deploy) / inst0.Delta_T * window_h
+
+    costs = np.zeros(T)
+    viols = 0
+    replans = 0
+    forecast = lam_path[0].copy()
+    for t in range(T):
+        lam_t = lam_path[t]
+        forecast = forecast_ewma * lam_t + (1 - forecast_ewma) * forecast
+        if replan_every is not None and t > 0 and t % replan_every == 0:
+            cand = planner(inst0.with_lam(forecast))
+            cand_obj = objective(inst0.with_lam(forecast), cand)
+            incumbent_obj = objective(inst0.with_lam(forecast), deploy)
+            if cand_obj < incumbent_obj - 1e-6:     # keep-best rule
+                deploy = cand
+                rental_w = provisioning_cost(inst0, deploy) / inst0.Delta_T * window_h
+                best_forecast_obj = cand_obj
+                replans += 1
+        inst_w = inst0.with_lam(lam_t)
+        costs[t], v = _window_cost(inst_w, deploy, rental_w)
+        viols += v
+    del best_forecast_obj
+    return RollingResult(method="", mean_window_cost=float(costs.mean()),
+                         total_cost=float(costs.sum()),
+                         violation_rate=viols / (T * inst0.I),
+                         per_window_cost=costs, replans=replans)
+
+
+def volatility_study(inst0: Instance, sigma: float, trials: int,
+                     planner: Callable[[Instance], Solution],
+                     replan_every: int | None, seed: int = 0,
+                     n_windows: int = 288) -> float:
+    """Mean 24 h cost over `trials` random-walk demand paths (Table 4)."""
+    totals = []
+    for trial in range(trials):
+        rng = np.random.default_rng(seed + 1000 * trial)
+        path = random_walk_lambdas(inst0.lam, sigma, n_windows, rng)
+        res = rolling(inst0, path, planner, replan_every=replan_every)
+        totals.append(res.total_cost)
+    return float(np.mean(totals))

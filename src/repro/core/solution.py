@@ -1,0 +1,155 @@
+"""Solution container + shared objective / feasibility evaluator for `P_DM`.
+
+Every solver (exact MILP, GH, AGH, LPR, DVR, HF) returns a `Solution`;
+the objective (8a) and the constraint system (8b)–(8k) are evaluated by ONE
+shared implementation so that costs and feasibility verdicts are comparable
+across methods and checkable by property tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .instance import Instance, KB_PER_GB
+
+
+@dataclasses.dataclass
+class Solution:
+    x: np.ndarray            # [I,J,K] routing fractions
+    y: np.ndarray            # [J,K]   GPUs per pair (int)
+    q: np.ndarray            # [J,K]   deployment flag
+    w: np.ndarray            # [J,K,C] joint TP/PP selector
+    z: np.ndarray            # [I,J,K] admission flag
+    u: np.ndarray            # [I]     unserved fraction
+    runtime_s: float = 0.0
+    method: str = ""
+
+    @staticmethod
+    def empty(inst: Instance) -> "Solution":
+        I, J, K, C = inst.I, inst.J, inst.K, inst.n_cfg
+        return Solution(x=np.zeros((I, J, K)), y=np.zeros((J, K)),
+                        q=np.zeros((J, K)), w=np.zeros((J, K, C)),
+                        z=np.zeros((I, J, K)), u=np.ones(I))
+
+    def copy(self) -> "Solution":
+        return Solution(self.x.copy(), self.y.copy(), self.q.copy(),
+                        self.w.copy(), self.z.copy(), self.u.copy(),
+                        self.runtime_s, self.method)
+
+    def config_of(self, inst: Instance, j: int, k: int) -> tuple[int, int] | None:
+        c = np.argmax(self.w[j, k])
+        if self.w[j, k, c] <= 0.5:
+            return None
+        return inst.configs[c]
+
+
+# ---------------------------------------------------------------------------
+# Objective (8a)
+# ---------------------------------------------------------------------------
+
+def proc_delay(inst: Instance, sol: Solution) -> np.ndarray:
+    """D_i^proc (eq. 6) in seconds, using the selected (TP, PP) per pair."""
+    # D_cfg[i,j,k,c] weighted by x * w  (the McCormick product, exact here
+    # because w is integral in any committed solution).
+    xw = sol.x[:, :, :, None] * sol.w[None, :, :, :]
+    return np.einsum("ijkc,ijkc->i", xw, inst.D_cfg)
+
+
+def cost_terms(inst: Instance, sol: Solution) -> dict[str, float]:
+    """The five objective components of (8a), in dollars over Delta_T."""
+    rental = inst.Delta_T * float(np.sum(inst.p_c[None, :] * sol.y))
+    model_storage = inst.Delta_T * inst.p_s * float(
+        np.sum(inst.B[None, :, None] * sol.z))
+    data_gb_h = (inst.theta[:, None, None] / KB_PER_GB
+                 * inst.r[:, None, None] * inst.lam[:, None, None] * sol.x)
+    data_storage = inst.Delta_T * inst.p_s * float(np.sum(data_gb_h))
+    delay_pen = float(np.sum(inst.rho * proc_delay(inst, sol) * 1e3))  # rho $/ms
+    unmet_pen = inst.Delta_T * float(np.sum(inst.phi * sol.u))
+    return dict(rental=rental, model_storage=model_storage,
+                data_storage=data_storage, delay_penalty=delay_pen,
+                unmet_penalty=unmet_pen)
+
+
+def objective(inst: Instance, sol: Solution) -> float:
+    return float(sum(cost_terms(inst, sol).values()))
+
+
+def provisioning_cost(inst: Instance, sol: Solution) -> float:
+    """Stage-1 cost: rental + model storage (deterministic given deployment)."""
+    t = cost_terms(inst, sol)
+    return t["rental"] + t["model_storage"]
+
+
+# ---------------------------------------------------------------------------
+# Constraints (8b)–(8k)
+# ---------------------------------------------------------------------------
+
+def kv_gb_per_device(inst: Instance, sol: Solution, j: int, k: int,
+                     nm: float) -> float:
+    """KV-cache GB per device for pair (j,k) under config product nm (8f)."""
+    if not inst.kv_applicable[j]:
+        # SSM-state models: constant recurrent state, not per-token KV.
+        return (inst.beta[j] / KB_PER_GB) * 64.0 / nm
+    tokens = float(np.sum(inst.r * inst.T_res[:, j, k] * sol.x[:, j, k]))
+    return (inst.beta[j] / KB_PER_GB) / nm * tokens
+
+
+def feasibility(inst: Instance, sol: Solution, tol: float = 1e-6,
+                enforce_zeta: bool = True) -> dict[str, float]:
+    """Max violation per constraint family; all ≈0 ⇒ feasible."""
+    v: dict[str, float] = {}
+    I, J, K = inst.I, inst.J, inst.K
+    # (8b) routing + unmet = 1
+    v["demand"] = float(np.max(np.abs(sol.x.sum(axis=(1, 2)) + sol.u - 1.0)))
+    # (8c) budget
+    data_gb_h = (inst.theta[:, None, None] / KB_PER_GB
+                 * inst.r[:, None, None] * inst.lam[:, None, None] * sol.x)
+    spend = (inst.Delta_T * np.sum(inst.p_c[None, :] * sol.y)
+             + inst.Delta_T * inst.p_s
+             * (np.sum(inst.B[None, :, None] * sol.z) + np.sum(data_gb_h)))
+    v["budget"] = max(0.0, float(spend - inst.delta))
+    # (8d)-(8e) configuration consistency
+    v["config_sum"] = float(np.max(np.abs(sol.w.sum(axis=2) - sol.q)))
+    v["y_eq_nm"] = float(np.max(np.abs(sol.y - np.einsum("jkc,c->jk", sol.w, inst.nm))))
+    # (8f) per-device memory
+    worst = 0.0
+    for j in range(J):
+        for k in range(K):
+            if sol.q[j, k] < 0.5:
+                worst = max(worst, float(np.sum(sol.x[:, j, k])))  # ghost routing
+                continue
+            n, m = sol.config_of(inst, j, k)
+            nm = n * m
+            used = inst.B_eff[j, k] / nm + kv_gb_per_device(inst, sol, j, k, nm)
+            worst = max(worst, used - inst.C_gpu[k])
+    v["memory"] = max(0.0, worst)
+    # (8g) compute throughput
+    load = np.einsum("ijk,ijk->jk", inst.alpha * (inst.r * inst.lam)[:, None, None] / 1e3,
+                     sol.x)
+    cap = inst.eta * 3600.0 * inst.P_gpu[None, :] * sol.y
+    v["compute"] = max(0.0, float(np.max(load - cap)))
+    # (8h) storage (per query type, as displayed with free i)
+    stor = (np.sum(inst.B[None, :, None] * sol.z, axis=(1, 2))
+            + np.sum(inst.theta[:, None, None] / KB_PER_GB
+                     * inst.r[:, None, None] * inst.lam[:, None, None] * sol.x,
+                     axis=(1, 2)))
+    v["storage"] = max(0.0, float(np.max(stor - inst.C_s)))
+    # (8i) delay SLO
+    v["delay"] = max(0.0, float(np.max(proc_delay(inst, sol) - inst.Delta)))
+    # (8j) error SLO
+    err = np.einsum("ijk,ijk->i", inst.e_bar, sol.x)
+    v["error"] = max(0.0, float(np.max(err - inst.eps)))
+    # (8k) chain x <= z <= q
+    v["chain"] = max(0.0, float(np.max(sol.x - sol.z - tol)),
+                     float(np.max(sol.z - sol.q[None, :, :] - tol)))
+    # unmet cap
+    if enforce_zeta:
+        v["unmet_cap"] = max(0.0, float(np.max(sol.u - inst.zeta)))
+    return v
+
+
+def is_feasible(inst: Instance, sol: Solution, tol: float = 1e-4,
+                enforce_zeta: bool = True) -> bool:
+    return all(val <= tol for val in
+               feasibility(inst, sol, enforce_zeta=enforce_zeta).values())

@@ -1,0 +1,5 @@
+# Pallas TPU kernels for the serving hot spots (prefill attention, decode
+# attention, Mamba2 SSD scan, RWKV6 WKV recurrence). Each subpackage ships
+# kernel.py (pl.pallas_call + BlockSpec VMEM tiling), ops.py (jit wrapper,
+# interpret mode on CPU), ref.py (pure-jnp oracle used by tests and as the
+# XLA path in the 512-device dry-run).

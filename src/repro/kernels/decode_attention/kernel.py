@@ -1,0 +1,95 @@
+"""Flash-decode attention — Pallas TPU kernel for the memory-bandwidth-bound
+decode phase (the paper's `d_comp = tau * B * nu / BW` regime).
+
+One query token per sequence attends against a long KV cache. The cache
+sweep is the sequential grid dim; per-step the kernel streams one
+(block_k, hd) K/V tile through VMEM and maintains the online-softmax state
+in scratch — the HBM traffic is exactly one pass over the cache, which is
+what makes decode bandwidth-bound.
+
+All H query heads of one KV group are processed together as the sublane dim
+of a [G, hd] x [hd, bk] MXU matmul (GQA-packed flash-decode).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(k_pos_ref, pos_ref, q_ref, k_ref, v_ref, o_ref,
+            m_ref, l_ref, acc_ref, *, n_k: int):
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)          # [G, hd]
+    k = k_ref[0, 0].astype(jnp.float32)          # [bk, hd]
+    v = v_ref[0, 0].astype(jnp.float32)          # [bk, hd]
+    kp = k_pos_ref[...]                          # [bk]
+    pos = pos_ref[0]
+
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)
+    s = s * (q.shape[-1] ** -0.5)
+    mask = kp <= pos                             # causal vs current position
+    s = jnp.where(mask[None, :], s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1)
+    acc_ref[...] = (acc_ref[...] * alpha[:, None]
+                    + jnp.dot(p, v, preferred_element_type=jnp.float32))
+    m_ref[...] = m_new
+
+    @pl.when(ik == n_k - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
+def decode_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                     k_pos: jnp.ndarray, pos: jnp.ndarray,
+                     block_k: int = 512, interpret: bool = True):
+    """q: [B, KV, G, hd] (one token, GQA-packed); k, v: [B, KV, S, hd];
+    k_pos: [S] absolute positions (ring caches pass their slot->pos map);
+    pos: [] int32 current decode position. Returns [B, KV, G, hd]."""
+    B, KV, G, hd = q.shape
+    S = k.shape[2]
+    bk = min(block_k, S)
+    assert S % bk == 0
+    n_k = S // bk
+    grid = (B, KV, n_k)
+
+    return pl.pallas_call(
+        functools.partial(_kernel, n_k=n_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bk,), lambda b, h, ik: (ik,)),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, G, hd), lambda b, h, ik: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda b, h, ik: (b, h, ik, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda b, h, ik: (b, h, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, hd), lambda b, h, ik: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G, hd), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(k_pos, pos.reshape(1), q, k, v)

@@ -1,0 +1,22 @@
+"""Jitted wrapper: Pallas flash-decode on TPU, interpret mode or jnp oracle
+on CPU."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import decode_attention as _kernel
+from .ref import decode_attention_ref
+
+
+def decode_attention(q, k, v, k_pos=None, pos=None, use_pallas: bool = True,
+                     block_k: int = 512):
+    S = k.shape[2]
+    if k_pos is None:
+        k_pos = jnp.arange(S, dtype=jnp.int32)
+    if pos is None:
+        pos = jnp.int32(S - 1)
+    if not use_pallas:
+        return decode_attention_ref(q, k, v, k_pos, pos)
+    interpret = jax.default_backend() != "tpu"
+    return _kernel(q, k, v, k_pos, pos, block_k=block_k, interpret=interpret)

@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for flash-decode attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def decode_attention_ref(q, k, v, k_pos, pos):
+    """q: [B, KV, G, hd]; k, v: [B, KV, S, hd]; k_pos: [S]; pos: []."""
+    s = jnp.einsum("bkgh,bksh->bkgs", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (q.shape[-1] ** -0.5)
+    mask = k_pos <= pos
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bksh->bkgh", p, v.astype(jnp.float32))
+    return o.astype(q.dtype)

@@ -1,0 +1,103 @@
+"""Flash attention (prefill) — Pallas TPU kernel.
+
+Grid: (B, H, Tq/block_q, Tk/block_k); the last grid dim is the sequential
+K sweep, with the online-softmax running state (m, l, acc) held in VMEM
+scratch across K steps. Blocks are MXU-aligned (block_q, block_k multiples
+of 128 at full size; head_dim is the lane dim).
+
+Masking is position-based (causal + optional sliding window), driven by
+explicit q_pos / k_pos vectors so the same kernel serves ordinary prefill
+and ring-buffer sliding-window caches.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_pos_ref, k_pos_ref, q_ref, k_ref, v_ref, o_ref,
+            m_ref, l_ref, acc_ref, *, window: int, n_k: int):
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)            # [bq, hd]
+    k = k_ref[0, 0].astype(jnp.float32)            # [bk, hd]
+    v = v_ref[0, 0].astype(jnp.float32)            # [bk, hd]
+    qp = q_pos_ref[...]                            # [bq]
+    kp = k_pos_ref[...]                            # [bk]
+
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)
+    s = s * (q.shape[-1] ** -0.5)
+    mask = kp[None, :] <= qp[:, None]
+    if window > 0:
+        mask &= kp[None, :] > qp[:, None] - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1)
+    acc_ref[...] = (acc_ref[...] * alpha[:, None]
+                    + jnp.dot(p, v, preferred_element_type=jnp.float32))
+    m_ref[...] = m_new
+
+    @pl.when(ik == n_k - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "block_q", "block_k",
+                                             "interpret"))
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                    q_pos: jnp.ndarray, k_pos: jnp.ndarray,
+                    window: int = 0, block_q: int = 128, block_k: int = 128,
+                    interpret: bool = True) -> jnp.ndarray:
+    """q: [B, H, Tq, hd]; k, v: [B, KV, Tk, hd] (GQA: H % KV == 0);
+    q_pos: [Tq] int32; k_pos: [Tk] int32. Returns [B, H, Tq, hd]."""
+    B, H, Tq, hd = q.shape
+    KV, Tk = k.shape[1], k.shape[2]
+    G = H // KV
+    bq = min(block_q, Tq)
+    bk = min(block_k, Tk)
+    assert Tq % bq == 0 and Tk % bk == 0
+    n_q, n_k = Tq // bq, Tk // bk
+    grid = (B, H, n_q, n_k)
+
+    return pl.pallas_call(
+        functools.partial(_kernel, window=window, n_k=n_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bq,), lambda b, h, iq, ik: (iq,)),
+            pl.BlockSpec((bk,), lambda b, h, iq, ik: (ik,)),
+            pl.BlockSpec((1, 1, bq, hd), lambda b, h, iq, ik: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, bk, hd),
+                         lambda b, h, iq, ik: (b, h // G, ik, 0)),
+            pl.BlockSpec((1, 1, bk, hd),
+                         lambda b, h, iq, ik: (b, h // G, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, hd),
+                               lambda b, h, iq, ik: (b, h, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Tq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, hd), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
+        interpret=interpret,
+    )(q_pos, k_pos, q, k, v)

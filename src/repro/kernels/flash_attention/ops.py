@@ -1,0 +1,26 @@
+"""Jitted public wrapper: kernel on TPU, interpret-mode kernel or jnp oracle
+on CPU (`use_pallas=False` falls back to the oracle — the XLA path used by
+the 512-device dry-run)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention as _kernel
+from .ref import attention_ref
+
+
+def flash_attention(q, k, v, q_pos=None, k_pos=None, window: int = 0,
+                    use_pallas: bool = True, block_q: int = 128,
+                    block_k: int = 128):
+    """q: [B, H, Tq, hd]; k, v: [B, KV, Tk, hd]."""
+    Tq, Tk = q.shape[2], k.shape[2]
+    if q_pos is None:
+        q_pos = jnp.arange(Tq, dtype=jnp.int32)
+    if k_pos is None:
+        k_pos = jnp.arange(Tk, dtype=jnp.int32)
+    if not use_pallas:
+        return attention_ref(q, k, v, q_pos, k_pos, window=window)
+    interpret = jax.default_backend() != "tpu"
+    return _kernel(q, k, v, q_pos, k_pos, window=window,
+                   block_q=block_q, block_k=block_k, interpret=interpret)

@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the flash attention kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                  q_pos: jnp.ndarray, k_pos: jnp.ndarray,
+                  window: int = 0) -> jnp.ndarray:
+    """Same layout as the kernel: q [B,H,Tq,hd], k/v [B,KV,Tk,hd]."""
+    B, H, Tq, hd = q.shape
+    KV = k.shape[1]
+    G = H // KV
+    qf = q.astype(jnp.float32).reshape(B, KV, G, Tq, hd)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bkgqh,bksh->bkgqs", qf, kf) * (hd ** -0.5)
+    mask = k_pos[None, :] <= q_pos[:, None]
+    if window > 0:
+        mask &= k_pos[None, :] > q_pos[:, None] - window
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bksh->bkgqh", p, vf)
+    return o.reshape(B, H, Tq, hd).astype(q.dtype)

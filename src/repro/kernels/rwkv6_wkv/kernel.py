@@ -1,0 +1,81 @@
+"""RWKV6 WKV recurrence — Pallas TPU kernel (data-dependent per-channel
+decay, chunked closed form).
+
+Grid: (B, H, T/chunk), chunk sweep sequential with the [hd, hd] state in
+VMEM scratch. Because RWKV6's decay is per-CHANNEL (a [hd] vector each
+step, not a scalar), the intra-chunk term carries a [Q, Q, hd] decay tensor
+— kept tile-resident (chunk=64, hd=64 -> 1 MB fp32) so it never leaves
+VMEM. Exact same math as models/rwkv6.py:
+
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T,  y_t = r_t (S_{t-1} + diag(u) k_t v_t^T)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(r_ref, k_ref, v_ref, lw_ref, u_ref, y_ref, s_ref, *, chunk: int):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    r = r_ref[0, :, 0].astype(jnp.float32)       # [Q, hd]
+    k = k_ref[0, :, 0].astype(jnp.float32)
+    v = v_ref[0, :, 0].astype(jnp.float32)
+    lw = lw_ref[0, :, 0].astype(jnp.float32)     # log decay, [Q, hd]
+    u = u_ref[0].astype(jnp.float32)             # [hd]
+
+    Q = chunk
+    cum = jnp.cumsum(lw, axis=0)                 # inclusive [Q, hd]
+    cum_excl = cum - lw
+    # intra-chunk (s < t): dec[t,s,:] = exp(cum_excl[t] - cum[s])
+    rel = cum_excl[:, None, :] - cum[None, :, :]         # [Q, Q, hd]
+    causal = jnp.tril(jnp.ones((Q, Q), jnp.float32), k=-1)
+    dec = jnp.exp(rel) * causal[:, :, None]
+    att = jnp.einsum("tk,tsk,sk->ts", r, dec, k)         # [Q, Q]
+    y = jnp.dot(att, v, preferred_element_type=jnp.float32)
+    # bonus diagonal (s = t)
+    bonus = jnp.sum(r * u[None, :] * k, axis=-1)         # [Q]
+    y = y + bonus[:, None] * v
+    # carry from previous state
+    y = y + jnp.dot(r * jnp.exp(cum_excl), s_ref[...],
+                    preferred_element_type=jnp.float32)
+    # state update
+    tail = jnp.exp(cum[-1:, :] - cum)                    # [Q, hd]
+    s_ref[...] = (jnp.exp(cum[-1])[:, None] * s_ref[...]
+                  + jnp.dot((tail * k).T, v,
+                            preferred_element_type=jnp.float32))
+    y_ref[0, :, 0] = y.astype(y_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def rwkv6_wkv(r: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+              lw: jnp.ndarray, u: jnp.ndarray,
+              chunk: int = 64, interpret: bool = True) -> jnp.ndarray:
+    """r, k, v, lw: [B, T, H, hd] (lw = log decay, < 0); u: [H, hd].
+    Returns y: [B, T, H, hd]."""
+    B, T, H, hd = r.shape
+    ch = min(chunk, T)
+    assert T % ch == 0
+    grid = (B, H, T // ch)
+
+    spec = pl.BlockSpec((1, ch, 1, hd), lambda b, h, ic: (b, ic, h, 0))
+    return pl.pallas_call(
+        functools.partial(_kernel, chunk=ch),
+        grid=grid,
+        in_specs=[spec, spec, spec, spec,
+                  pl.BlockSpec((1, hd), lambda b, h, ic: (h, 0))],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((B, T, H, hd), r.dtype),
+        scratch_shapes=[pltpu.VMEM((hd, hd), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(r, k, v, lw, u)

@@ -1,0 +1,14 @@
+"""Jitted wrapper for the RWKV6 WKV kernel."""
+from __future__ import annotations
+
+import jax
+
+from .kernel import rwkv6_wkv as _kernel
+from .ref import rwkv6_wkv_ref
+
+
+def rwkv6_wkv(r, k, v, lw, u, use_pallas: bool = True, chunk: int = 64):
+    if not use_pallas:
+        return rwkv6_wkv_ref(r, k, v, lw, u)
+    interpret = jax.default_backend() != "tpu"
+    return _kernel(r, k, v, lw, u, chunk=chunk, interpret=interpret)

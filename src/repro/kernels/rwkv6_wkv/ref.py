@@ -1,0 +1,24 @@
+"""Pure-jnp oracle: naive per-step WKV6 recurrence (exact)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rwkv6_wkv_ref(r, k, v, lw, u):
+    """r,k,v,lw: [B,T,H,hd]; u: [H,hd]."""
+    B, T, H, hd = r.shape
+    rf, kf, vf = (a.astype(jnp.float32) for a in (r, k, v))
+    w = jnp.exp(lw.astype(jnp.float32))          # decay in (0,1)
+
+    def step(S, t):
+        rt, kt, vt, wt = t                       # [B,H,hd]
+        kv = kt[..., None] * vt[..., None, :]    # [B,H,hd,hd]
+        y = jnp.einsum("bhk,bhkv->bhv", rt, S + u[None, :, :, None] * kv)
+        S = wt[..., None] * S + kv
+        return S, y
+
+    S0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+    xs = tuple(a.transpose(1, 0, 2, 3) for a in (rf, kf, vf, w))
+    _, ys = jax.lax.scan(step, S0, xs)
+    return ys.transpose(1, 0, 2, 3).astype(r.dtype)

@@ -1,0 +1,88 @@
+"""Mamba2 SSD chunked scan — Pallas TPU kernel.
+
+Grid: (B, nh, T/chunk) with the chunk sweep sequential; the carried SSM
+state S [hp, N] lives in VMEM scratch across chunk steps. Each step is three
+MXU matmuls (intra-chunk kernel, carry read-out, state update) over a
+[chunk, hp/N]-tiled VMEM working set — the TPU-native form of the paper's
+"recurrent-scan sharding" substrate for SSM/hybrid architectures.
+
+Math identical to models/mamba2.py (scalar-per-head decay SSD):
+    S_t = exp(dt_t A) S_{t-1} + dt_t x_t B_t^T,   y_t = S_t C_t + D x_t
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, b_ref, c_ref, dt_ref, a_ref, d_ref, y_ref, s_ref,
+            *, n_chunks: int, chunk: int):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    x = x_ref[0, :, 0].astype(jnp.float32)       # [Q, hp]
+    Bm = b_ref[0].astype(jnp.float32)            # [Q, N]
+    Cm = c_ref[0].astype(jnp.float32)            # [Q, N]
+    dt = dt_ref[0, :, 0].astype(jnp.float32)     # [Q]
+    A = a_ref[0]                                  # scalar (per head)
+
+    la = dt * A                                   # log decay, [Q]
+    cum = jnp.cumsum(la)                          # inclusive
+    # intra-chunk kernel M[t,s] = exp(cum_t - cum_s) * (C_t . B_s) * dt_s
+    rel = cum[:, None] - cum[None, :]
+    Q = chunk
+    causal = jnp.tril(jnp.ones((Q, Q), jnp.float32))
+    decay = jnp.exp(rel) * causal
+    cb = jnp.dot(Cm, Bm.T, preferred_element_type=jnp.float32)
+    M = decay * cb * dt[None, :]
+    y = jnp.dot(M, x, preferred_element_type=jnp.float32)     # [Q, hp]
+    # inter-chunk carry: y_t += C_t . (exp(cum_t) * S_prev)    S: [hp, N]
+    y = y + jnp.exp(cum)[:, None] * jnp.dot(
+        Cm, s_ref[...].T, preferred_element_type=jnp.float32)
+    # state update: S' = exp(cum_Q) S + sum_s exp(cum_Q - cum_s) dt_s x_s B_s^T
+    tail = jnp.exp(cum[-1] - cum) * dt                         # [Q]
+    s_ref[...] = (jnp.exp(cum[-1]) * s_ref[...]
+                  + jnp.dot((tail[:, None] * x).T, Bm,
+                            preferred_element_type=jnp.float32))
+    y = y + d_ref[0] * x
+    y_ref[0, :, 0] = y.astype(y_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssm_scan(x: jnp.ndarray, Bm: jnp.ndarray, Cm: jnp.ndarray,
+             dt: jnp.ndarray, A: jnp.ndarray, D: jnp.ndarray,
+             chunk: int = 128, interpret: bool = True) -> jnp.ndarray:
+    """x: [B, T, nh, hp]; Bm, Cm: [B, T, N]; dt: [B, T, nh];
+    A, D: [nh]. Returns y: [B, T, nh, hp]."""
+    B, T, nh, hp = x.shape
+    N = Bm.shape[-1]
+    ch = min(chunk, T)
+    assert T % ch == 0
+    n_chunks = T // ch
+    grid = (B, nh, n_chunks)
+
+    return pl.pallas_call(
+        functools.partial(_kernel, n_chunks=n_chunks, chunk=ch),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, ch, 1, hp), lambda b, h, ic: (b, ic, h, 0)),
+            pl.BlockSpec((1, ch, N), lambda b, h, ic: (b, ic, 0)),
+            pl.BlockSpec((1, ch, N), lambda b, h, ic: (b, ic, 0)),
+            pl.BlockSpec((1, ch, 1), lambda b, h, ic: (b, ic, h)),
+            pl.BlockSpec((1,), lambda b, h, ic: (h,)),
+            pl.BlockSpec((1,), lambda b, h, ic: (h,)),
+        ],
+        out_specs=pl.BlockSpec((1, ch, 1, hp), lambda b, h, ic: (b, ic, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, T, nh, hp), x.dtype),
+        scratch_shapes=[pltpu.VMEM((hp, N), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(x, Bm, Cm, dt, A.astype(jnp.float32), D.astype(jnp.float32))

@@ -1,0 +1,14 @@
+"""Jitted wrapper for the Mamba2 SSD scan kernel."""
+from __future__ import annotations
+
+import jax
+
+from .kernel import ssm_scan as _kernel
+from .ref import ssm_scan_ref
+
+
+def ssm_scan(x, Bm, Cm, dt, A, D, use_pallas: bool = True, chunk: int = 128):
+    if not use_pallas:
+        return ssm_scan_ref(x, Bm, Cm, dt, A, D)
+    interpret = jax.default_backend() != "tpu"
+    return _kernel(x, Bm, Cm, dt, A, D, chunk=chunk, interpret=interpret)

@@ -1,0 +1,28 @@
+"""Pure-jnp oracle: naive per-step SSD recurrence (exact)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssm_scan_ref(x, Bm, Cm, dt, A, D):
+    """x: [B,T,nh,hp]; Bm,Cm: [B,T,N]; dt: [B,T,nh]; A,D: [nh]."""
+    B, T, nh, hp = x.shape
+    N = Bm.shape[-1]
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+
+    def step(S, t):
+        xt, Bt, Ct, dtt = t
+        a = jnp.exp(dtt * A)                       # [B, nh]
+        S = (S * a[..., None, None]
+             + dtt[..., None, None] * xt[..., None] * Bt[:, None, None, :])
+        y = jnp.einsum("bhpn,bn->bhp", S, Ct)
+        return S, y
+
+    S0 = jnp.zeros((B, nh, hp, N), jnp.float32)
+    xs = (xf.transpose(1, 0, 2, 3), Bm.astype(jnp.float32).transpose(1, 0, 2),
+          Cm.astype(jnp.float32).transpose(1, 0, 2), dtf.transpose(1, 0, 2))
+    _, ys = jax.lax.scan(step, S0, xs)
+    y = ys.transpose(1, 0, 2, 3) + D[None, None, :, None] * xf
+    return y.astype(x.dtype)

@@ -1,0 +1,186 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512").strip()
+
+"""Multi-pod dry-run: prove the distribution config is coherent.
+
+For one (architecture × input shape × mesh) combination this script
+`.lower().compile()`s the step function on 512 placeholder host devices
+(single-pod 16x16 and multi-pod 2x16x16 meshes), prints
+`compiled.memory_analysis()` (proves the program fits) and
+`compiled.cost_analysis()` (FLOPs/bytes for the roofline), and extracts
+the collective schedule from the optimized HLO.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-72b \
+        --shape train_4k [--multi-pod] [--json out.json]
+
+The XLA_FLAGS line above MUST run before any jax import (device count is
+locked at first init) — do not move it.
+"""
+import argparse
+import json
+import sys
+import time
+
+
+def run_one(arch: str, shape: str, multi_pod: bool,
+            donate: bool = True, opts: tuple[str, ...] = ()) -> dict:
+    import dataclasses
+
+    import jax
+    import jax.numpy as jnp
+
+    from ..configs import get_config
+    from ..models import decoder
+    from ..models.config import ModelConfig
+    from ..parallel import sharding as shd
+    from ..training.optimizer import AdamWConfig, init_state
+    from ..training.train_loop import make_train_step
+    from ..analysis.hlo_stats import analyze
+    from .mesh import make_production_mesh
+    from .specs import (applicable, input_specs, params_specs, shape_case)
+
+    cfg: ModelConfig = get_config(arch)
+    # Beyond-paper optimization variants (§Perf): baseline has all off.
+    flag_map = dict(seqshard="seq_shard_attention",
+                    moeshard="moe_expert_shard_constraint",
+                    w8a8="moe_w8a8")
+    cfg_opts = {flag_map[o]: True for o in opts if o in flag_map}
+    if cfg_opts:
+        cfg = dataclasses.replace(cfg, **cfg_opts)
+    case = shape_case(shape)
+    ok, why = applicable(cfg, case)
+    if not ok:
+        return dict(arch=arch, shape=shape, multi_pod=multi_pod,
+                    status="skipped", reason=why)
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.devices.size
+    t0 = time.perf_counter()
+
+    p_shapes = params_specs(cfg)
+    p_spec = shd.param_specs(p_shapes, mesh)
+    p_shard = shd.to_shardings(p_spec, mesh)
+    inputs = input_specs(cfg, case)
+
+    with mesh:
+        if case.kind == "train":
+            opt_shapes = jax.eval_shape(init_state, p_shapes)
+            opt_spec = dict(mu=p_spec, nu=p_spec,
+                            step=jax.sharding.PartitionSpec())
+            opt_shard = shd.to_shardings(opt_spec, mesh)
+            batch_shard = {k: jax.sharding.NamedSharding(
+                mesh, shd.batch_spec(mesh, v.shape))
+                for k, v in inputs.items()}
+            step = make_train_step(cfg, AdamWConfig())
+            jitted = jax.jit(step,
+                             in_shardings=(p_shard, opt_shard, batch_shard),
+                             out_shardings=(p_shard, opt_shard, None),
+                             donate_argnums=(0, 1) if donate else ())
+            lowered = jitted.lower(p_shapes, opt_shapes, inputs)
+        elif case.kind == "prefill":
+            def prefill_step(params, tokens, prefix=None):
+                return decoder.prefill(params, cfg, tokens, prefix,
+                                       max_len=case.seq_len)
+            args = [p_shapes, inputs["tokens"]]
+            shards = [p_shard, jax.sharding.NamedSharding(
+                mesh, shd.batch_spec(mesh, inputs["tokens"].shape))]
+            if "prefix" in inputs:
+                args.append(inputs["prefix"])
+                shards.append(jax.sharding.NamedSharding(
+                    mesh, shd.batch_spec(mesh, inputs["prefix"].shape)))
+            jitted = jax.jit(prefill_step, in_shardings=tuple(shards))
+            lowered = jitted.lower(*args)
+        else:  # decode
+            cache_shapes = inputs["cache"]
+            cache_spec = shd.cache_specs(cache_shapes, mesh,
+                                         prefer_hd="kvhd" in opts)
+            cache_shard = shd.to_shardings(cache_spec, mesh)
+
+            def serve_step(params, cache, tokens, pos):
+                return decoder.decode_step(params, cfg, cache, tokens, pos)
+
+            tok_shard = jax.sharding.NamedSharding(
+                mesh, shd.batch_spec(mesh, inputs["tokens"].shape))
+            jitted = jax.jit(
+                serve_step,
+                in_shardings=(p_shard, cache_shard, tok_shard, None),
+                out_shardings=(None, cache_shard),
+                donate_argnums=(1,) if donate else ())
+            lowered = jitted.lower(p_shapes, cache_shapes,
+                                   inputs["tokens"], inputs["pos"])
+
+        t_lower = time.perf_counter() - t0
+        compiled = lowered.compile()
+        t_compile = time.perf_counter() - t0 - t_lower
+
+    cost = compiled.cost_analysis() or {}
+    try:
+        mem = compiled.memory_analysis()
+        mem_info = dict(
+            argument_bytes=getattr(mem, "argument_size_in_bytes", None),
+            output_bytes=getattr(mem, "output_size_in_bytes", None),
+            temp_bytes=getattr(mem, "temp_size_in_bytes", None),
+            generated_code_bytes=getattr(
+                mem, "generated_code_size_in_bytes", None))
+    except Exception as e:  # CPU backend may not implement it
+        mem_info = dict(error=str(e))
+
+    # Trip-count-aware per-device HLO stats (XLA:CPU's cost_analysis does
+    # not multiply while-loop bodies by trip count — see analysis/hlo_stats).
+    stats = analyze(compiled.as_text())
+
+    result = dict(
+        arch=arch, shape=shape, multi_pod=multi_pod, status="ok",
+        opts=list(opts),
+        n_devices=n_dev, kind=case.kind,
+        lower_s=round(t_lower, 2), compile_s=round(t_compile, 2),
+        # per-device (the SPMD module is the per-partition program)
+        hlo_flops_per_device=stats.flops,
+        hlo_bytes_per_device=stats.bytes_estimate,
+        hlo_bytes_upper=stats.bytes_accessed,
+        hlo_bytes_lower=stats.bytes_written + stats.argument_bytes,
+        collective_bytes_per_device=stats.collective_bytes,
+        collectives=stats.collectives,
+        n_collectives=stats.n_collectives,
+        raw_cost_analysis_flops=float(cost.get("flops", 0.0)),
+        memory=mem_info,
+        params_total=cfg.param_count(),
+        params_active=cfg.active_param_count(),
+    )
+    return result
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--json", default=None, help="append result to this file")
+    ap.add_argument("--opt", action="append", default=[],
+                    choices=["seqshard", "moeshard", "w8a8", "kvhd"],
+                    help="enable a beyond-paper optimization variant")
+    args = ap.parse_args(argv)
+
+    res = run_one(args.arch, args.shape, args.multi_pod,
+                  opts=tuple(args.opt))
+    print(json.dumps(res, indent=2, default=str))
+    if args.json:
+        try:
+            with open(args.json) as f:
+                data = json.load(f)
+        except (FileNotFoundError, json.JSONDecodeError):
+            data = []
+        data = [r for r in data
+                if not (r["arch"] == res["arch"] and r["shape"] == res["shape"]
+                        and r["multi_pod"] == res["multi_pod"]
+                        and r.get("opts", []) == res["opts"])]
+        data.append(res)
+        with open(args.json, "w") as f:
+            json.dump(data, f, indent=1, default=str)
+    return 0 if res["status"] in ("ok", "skipped") else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,34 @@
+"""Production mesh construction.
+
+Single pod: 256 chips as (data=16, model=16).
+Multi-pod:  512 chips as (pod=2, data=16, model=16) — the `pod` axis carries
+data parallelism across pods (batch + FSDP), keeping TP traffic inside a pod
+where ICI bandwidth lives; only gradient/FSDP collectives cross pods.
+
+Defined as a FUNCTION so importing this module never touches jax device
+state (device count is locked at first jax init — the dry-run sets
+XLA_FLAGS before any import).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model: int | None = None):
+    """Small mesh over whatever devices exist (tests / examples on CPU)."""
+    n = len(jax.devices())
+    model = model or 1
+    assert n % model == 0
+    return jax.make_mesh((n // model, model), ("data", "model"))
+
+
+# TPU v5e hardware constants used by the roofline analysis (per chip).
+PEAK_FLOPS_BF16 = 197e12          # FLOP/s
+HBM_BW = 819e9                    # B/s
+ICI_BW = 50e9                     # B/s per link

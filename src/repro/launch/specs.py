@@ -1,0 +1,90 @@
+"""ShapeDtypeStruct input stand-ins for every (architecture × input shape).
+
+No device allocation happens here — everything is `jax.eval_shape` /
+`ShapeDtypeStruct`, the pattern required for the multi-pod dry-run.
+
+Input shapes (assignment):
+    train_4k     seq=4,096    global_batch=256   (training)
+    prefill_32k  seq=32,768   global_batch=32    (inference prefill)
+    decode_32k   seq=32,768   global_batch=128   (one-token decode vs cache)
+    long_500k    seq=524,288  global_batch=1     (long-context decode)
+
+[vlm]/[audio] carve-out: the modality frontend is a stub — `input_specs`
+supplies pre-projected patch/conditioning embeddings of the right shape;
+the text length shrinks so prefix + text == the assigned seq_len.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from ..models import decoder
+from ..models.config import ModelConfig
+
+SHAPES = {
+    "train_4k": dict(seq_len=4_096, global_batch=256, kind="train"),
+    "prefill_32k": dict(seq_len=32_768, global_batch=32, kind="prefill"),
+    "decode_32k": dict(seq_len=32_768, global_batch=128, kind="decode"),
+    "long_500k": dict(seq_len=524_288, global_batch=1, kind="decode"),
+}
+
+
+@dataclasses.dataclass
+class ShapeCase:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str          # train | prefill | decode
+
+
+def shape_case(name: str) -> ShapeCase:
+    s = SHAPES[name]
+    return ShapeCase(name=name, **s)
+
+
+def applicable(cfg: ModelConfig, case: ShapeCase) -> tuple[bool, str]:
+    """long_500k requires a sub-quadratic serving path (DESIGN.md
+    §Arch-applicability); every other (arch, shape) pair runs."""
+    if case.name == "long_500k" and not cfg.is_subquadratic:
+        return False, ("full-attention arch without sliding-window variant; "
+                       "O(seq^2)/O(seq) decode at 524k is out of scope "
+                       "(skip noted in DESIGN.md)")
+    return True, ""
+
+
+def _tok_sds(cfg: ModelConfig, B: int, T: int) -> jax.ShapeDtypeStruct:
+    shape = (B, T, cfg.n_codebooks) if cfg.n_codebooks else (B, T)
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def input_specs(cfg: ModelConfig, case: ShapeCase) -> dict:
+    """ShapeDtypeStruct stand-ins for the step function's inputs."""
+    B = case.global_batch
+    P = cfg.n_prefix_embeds
+    if case.kind == "train":
+        text = case.seq_len - P
+        out = dict(tokens=_tok_sds(cfg, B, text),
+                   targets=_tok_sds(cfg, B, text))
+        if P:
+            out["prefix"] = jax.ShapeDtypeStruct((B, P, cfg.d_model),
+                                                 cfg.jdtype)
+        return out
+    if case.kind == "prefill":
+        text = case.seq_len - P
+        out = dict(tokens=_tok_sds(cfg, B, text))
+        if P:
+            out["prefix"] = jax.ShapeDtypeStruct((B, P, cfg.d_model),
+                                                 cfg.jdtype)
+        return out
+    # decode: one new token against a cache holding `seq_len` positions.
+    cache = jax.eval_shape(
+        lambda: decoder.init_cache(cfg, B, case.seq_len))
+    return dict(cache=cache, tokens=_tok_sds(cfg, B, 1),
+                pos=jax.ShapeDtypeStruct((), jnp.int32))
+
+
+def params_specs(cfg: ModelConfig) -> dict:
+    return jax.eval_shape(
+        lambda: decoder.init_params(jax.random.PRNGKey(0), cfg))

@@ -1,0 +1,50 @@
+"""Distributed training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen2-0.5b \
+        [--smoke] [--steps 100] [--batch 8] [--seq 256] [--ckpt DIR]
+
+With --smoke the reduced config trains on host devices; the full config
+path builds the same jitted step with production-mesh shardings (used by
+the dry-run; executing it requires real chips).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    from ..configs import get_config
+    from ..training.data import DataConfig, PackedStream
+    from ..training.optimizer import AdamWConfig
+    from ..training.train_loop import train
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = cfg.smoke()
+    stream = PackedStream(DataConfig(
+        vocab_size=cfg.vocab_size, seq_len=args.seq, batch_size=args.batch,
+        n_codebooks=cfg.n_codebooks))
+    opt = AdamWConfig(lr=args.lr, total_steps=args.steps,
+                      warmup_steps=max(1, args.steps // 10))
+    _, history = train(cfg, opt, stream, args.steps,
+                       ckpt_path=args.ckpt, ckpt_every=args.ckpt_every)
+    for h in history:
+        print("step=%4d loss=%.4f grad_norm=%.3f lr=%.2e wall=%.1fs"
+              % (h["step"], h["loss"], h["grad_norm"], h["lr"], h["wall_s"]))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,301 @@
+"""Composable decoder covering all ten assigned architectures.
+
+Layer stacks are `jax.lax.scan` over stacked parameters, so HLO size is
+independent of depth (81-layer zamba2 compiles as fast as 24-layer qwen2).
+The hybrid (zamba2) family is structured as super-blocks: `attn_every`
+mamba2 layers followed by ONE shared attention block (single weight set
+reused at every invocation, per the Zamba2 design), scanned over
+super-blocks so the shared-attention KV cache has one slot per invocation
+rather than per layer.
+
+Public entry points (used by training, serving, and the dry-run):
+    init_params(rng, cfg)
+    train_loss(params, cfg, batch)             # next-token CE
+    prefill(params, cfg, tokens[, prefix])     # -> (last_logits, cache)
+    decode_step(params, cfg, cache, tokens, pos)  # -> (logits, cache)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import (attention_apply, attention_block_params,
+                     chunked_ce_loss, mlp_apply, mlp_params, rms_norm)
+from .mamba2 import mamba2_apply, mamba2_cache_init, mamba2_params
+from .moe import moe_apply, moe_params
+from .rwkv6 import rwkv6_apply, rwkv6_cache_init, rwkv6_params
+
+
+# ---------------------------------------------------------------------------
+# Parameter initialization
+# ---------------------------------------------------------------------------
+
+def _layer_params(rng, cfg: ModelConfig, stacked: int) -> dict:
+    k_mix, k_ch, k_n = jax.random.split(rng, 3)
+    p = dict(ln1=jnp.ones((stacked, cfg.d_model), jnp.float32),
+             ln2=jnp.ones((stacked, cfg.d_model), jnp.float32))
+    if cfg.token_mixer == "attention":
+        p["attn"] = attention_block_params(k_mix, cfg, stacked=stacked)
+    elif cfg.token_mixer == "mamba2":
+        p["mamba"] = mamba2_params(k_mix, cfg, stacked=stacked)
+    elif cfg.token_mixer == "rwkv6":
+        p["rwkv"] = rwkv6_params(k_mix, cfg, stacked=stacked)
+    else:
+        raise ValueError(cfg.token_mixer)
+    if cfg.n_experts:
+        p["moe"] = moe_params(k_ch, cfg, stacked=stacked)
+    else:
+        p["mlp"] = mlp_params(k_ch, cfg.d_model, cfg.d_ff, cfg.jdtype,
+                              stacked=stacked)
+    del k_n
+    return p
+
+
+def init_params(rng, cfg: ModelConfig) -> dict:
+    ks = jax.random.split(rng, 6)
+    nq = max(cfg.n_codebooks, 1)
+    embed_shape = ((cfg.vocab_size, cfg.d_model) if nq == 1
+                   else (nq, cfg.vocab_size, cfg.d_model))
+    head_shape = ((cfg.d_model, cfg.vocab_size) if nq == 1
+                  else (nq, cfg.d_model, cfg.vocab_size))
+    params = dict(
+        embed=(jax.random.normal(ks[0], embed_shape, jnp.float32)
+               * cfg.d_model ** -0.5).astype(cfg.jdtype),
+        head=(jax.random.normal(ks[1], head_shape, jnp.float32)
+              * cfg.d_model ** -0.5).astype(cfg.jdtype),
+        final_norm=jnp.ones((cfg.d_model,), jnp.float32))
+    if cfg.attn_every:  # hybrid super-block layout
+        n_super, tail = _hybrid_shape(cfg)
+        params["layers"] = _layer_params(ks[2], cfg,
+                                         stacked=n_super * cfg.attn_every)
+        if tail:
+            params["tail"] = _layer_params(ks[3], cfg, stacked=tail)
+        params["shared_attn"] = dict(
+            attn=attention_block_params(ks[4], cfg),
+            ln=jnp.ones((cfg.d_model,), jnp.float32))
+    else:
+        params["layers"] = _layer_params(ks[2], cfg, stacked=cfg.n_layers)
+    if cfg.n_prefix_embeds:
+        params["prefix_proj"] = (
+            jax.random.normal(ks[5], (cfg.d_model, cfg.d_model), jnp.float32)
+            * cfg.d_model ** -0.5).astype(cfg.jdtype)
+    return params
+
+
+def _hybrid_shape(cfg: ModelConfig) -> tuple[int, int]:
+    """(#super-blocks, #tail mamba layers) for attn_every-hybrid stacks."""
+    n_super = cfg.n_layers // cfg.attn_every
+    tail = cfg.n_layers - n_super * cfg.attn_every
+    return n_super, tail
+
+
+# ---------------------------------------------------------------------------
+# Single layer body
+# ---------------------------------------------------------------------------
+
+def _channel_mix(lp: dict, cfg: ModelConfig, x: jnp.ndarray) -> jnp.ndarray:
+    h = rms_norm(x, lp["ln2"])
+    if cfg.n_experts:
+        return x + moe_apply(lp["moe"], cfg, h)
+    return x + mlp_apply(lp["mlp"], h)
+
+
+def _layer_body(lp: dict, cfg: ModelConfig, x: jnp.ndarray,
+                cache_l, pos0, window: int | None):
+    h = rms_norm(x, lp["ln1"])
+    if cfg.token_mixer == "attention":
+        out, new_cache = attention_apply(lp["attn"], cfg, h, cache_l, pos0,
+                                         window=window)
+    elif cfg.token_mixer == "mamba2":
+        out, new_cache = mamba2_apply(lp["mamba"], cfg, h, cache_l)
+    else:
+        out, new_cache = rwkv6_apply(lp["rwkv"], cfg, h, cache_l)
+    x = x + out
+    x = _channel_mix(lp, cfg, x)
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Stacked forward (scan over layers / super-blocks)
+# ---------------------------------------------------------------------------
+
+def _scan_layers(params: dict, cfg: ModelConfig, x: jnp.ndarray,
+                 cache: dict | None, pos0, window: int | None):
+    """Returns (hidden, new_cache)."""
+    def body(carry, inp):
+        lp, cache_l = inp
+        h, new_c = _layer_body(lp, cfg, carry, cache_l, pos0, window)
+        return h, new_c
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+
+    if cfg.attn_every:
+        return _scan_hybrid(params, cfg, x, cache, pos0, window, body_fn)
+
+    cache_xs = None if cache is None else cache["layers"]
+    xs = (params["layers"], cache_xs)
+    h, new_cache_xs = jax.lax.scan(body_fn, x, xs)
+    return h, (None if cache is None else dict(layers=new_cache_xs))
+
+
+def _scan_hybrid(params, cfg, x, cache, pos0, window, body_fn):
+    n_super, tail = _hybrid_shape(cfg)
+    E = cfg.attn_every
+    sa = params["shared_attn"]
+
+    def super_block(carry, inp):
+        h, attn_cache_slot = carry if isinstance(carry, tuple) else (carry, None)
+        lp_group, mamba_cache_group, attn_cache_l = inp
+        # E mamba layers (unrolled within the super-block: E is small).
+        new_m_caches = []
+        for e in range(E):
+            lp_e = jax.tree.map(lambda a: a[e], lp_group)
+            c_e = (None if mamba_cache_group is None
+                   else jax.tree.map(lambda a: a[e], mamba_cache_group))
+            h, nc = _layer_body(lp_e, cfg, h, c_e, pos0, window)
+            new_m_caches.append(nc)
+        # shared attention block (single weight set)
+        hn = rms_norm(h, sa["ln"])
+        out, new_attn_c = attention_apply(sa["attn"], cfg, hn, attn_cache_l,
+                                          pos0, window=window)
+        h = h + out
+        new_m = (None if mamba_cache_group is None else
+                 jax.tree.map(lambda *a: jnp.stack(a), *new_m_caches))
+        return h, (new_m, new_attn_c)
+
+    # reshape stacked mamba params (n_super*E, ...) -> (n_super, E, ...)
+    lp_groups = jax.tree.map(
+        lambda a: a.reshape((n_super, E) + a.shape[1:]), params["layers"])
+    if cache is None:
+        xs = (lp_groups, None, None)
+        def body2(carry, inp):
+            h, _ = super_block((carry, None), inp)
+            return h, None
+        h, _ = jax.lax.scan(jax.checkpoint(body2) if cfg.remat else body2,
+                            x, xs)
+        new_cache = None
+    else:
+        xs = (lp_groups, cache["mamba"], cache["attn"])
+        def body3(carry, inp):
+            h, (new_m, new_a) = super_block((carry, None), inp)
+            return h, (new_m, new_a)
+        h, (new_m_all, new_a_all) = jax.lax.scan(
+            jax.checkpoint(body3) if cfg.remat else body3, x, xs)
+        new_cache = dict(mamba=new_m_all, attn=new_a_all,
+                         tail=cache.get("tail"))
+    # tail mamba layers (unrolled: tail < attn_every)
+    if tail:
+        new_tail = []
+        for e in range(tail):
+            lp_e = jax.tree.map(lambda a: a[e], params["tail"])
+            c_e = (None if cache is None
+                   else jax.tree.map(lambda a: a[e], cache["tail"]))
+            h, nc = _layer_body(lp_e, cfg, h, c_e, pos0, window)
+            new_tail.append(nc)
+        if cache is not None:
+            new_cache["tail"] = jax.tree.map(lambda *a: jnp.stack(a),
+                                             *new_tail)
+    return h, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head
+# ---------------------------------------------------------------------------
+
+def _embed(params: dict, cfg: ModelConfig, tokens: jnp.ndarray,
+           prefix: jnp.ndarray | None) -> jnp.ndarray:
+    if cfg.n_codebooks:
+        # tokens: [B, T, nq] — sum the per-codebook embeddings.
+        x = sum(params["embed"][qb][tokens[..., qb]]
+                for qb in range(cfg.n_codebooks))
+    else:
+        x = params["embed"][tokens]
+    if prefix is not None:
+        pre = prefix.astype(x.dtype) @ params["prefix_proj"]
+        x = jnp.concatenate([pre, x], axis=1)
+    return x
+
+
+def _logits(params: dict, cfg: ModelConfig, h: jnp.ndarray) -> jnp.ndarray:
+    h = rms_norm(h, params["final_norm"])
+    if cfg.n_codebooks:
+        return jnp.einsum("btd,qdv->btqv", h, params["head"])
+    return h @ params["head"]
+
+
+# ---------------------------------------------------------------------------
+# Public API
+# ---------------------------------------------------------------------------
+
+def train_loss(params: dict, cfg: ModelConfig, batch: dict) -> jnp.ndarray:
+    """Next-token cross-entropy. batch: tokens [B,S] (or [B,S,nq]),
+    targets same shape, optional prefix [B,P,d_model]."""
+    prefix = batch.get("prefix")
+    x = _embed(params, cfg, batch["tokens"], prefix)
+    h, _ = _scan_layers(params, cfg, x, None, jnp.int32(0),
+                        window=cfg.sliding_window or None)
+    h = rms_norm(h, params["final_norm"])
+    P = 0 if prefix is None else prefix.shape[1]
+    h = h[:, P:]
+    if cfg.n_codebooks:
+        losses = [chunked_ce_loss(params["head"][q], h,
+                                  batch["targets"][..., q], cfg.loss_chunk)
+                  for q in range(cfg.n_codebooks)]
+        return jnp.mean(jnp.stack(losses))
+    return chunked_ce_loss(params["head"], h, batch["targets"],
+                           cfg.loss_chunk)
+
+
+def init_cache(cfg: ModelConfig, B: int, max_len: int) -> dict:
+    """KV/state cache sized for `max_len` total positions."""
+    KV, hd = cfg.n_kv_heads, cfg.hd
+    S = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+    dt = cfg.jdtype
+
+    def attn_cache(n):
+        return (jnp.zeros((n, B, S, KV, hd), dt),
+                jnp.zeros((n, B, S, KV, hd), dt))
+
+    if cfg.attn_every:
+        n_super, tail = _hybrid_shape(cfg)
+        m = mamba2_cache_init(cfg, B, dt)
+        return dict(
+            mamba=jax.tree.map(
+                lambda a: jnp.broadcast_to(
+                    a, (n_super, cfg.attn_every) + a.shape).copy(), m),
+            attn=attn_cache(n_super),
+            tail=(jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (tail,) + a.shape).copy(), m)
+                if tail else None))
+    if cfg.token_mixer == "attention":
+        return dict(layers=attn_cache(cfg.n_layers))
+    if cfg.token_mixer == "mamba2":
+        m = mamba2_cache_init(cfg, B, dt)
+    else:
+        m = rwkv6_cache_init(cfg, B, dt)
+    return dict(layers=jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (cfg.n_layers,) + a.shape).copy(), m))
+
+
+def prefill(params: dict, cfg: ModelConfig, tokens: jnp.ndarray,
+            prefix: jnp.ndarray | None = None, max_len: int | None = None):
+    """Process the prompt; return (last-position logits, filled cache)."""
+    B = tokens.shape[0]
+    T = tokens.shape[1] + (0 if prefix is None else prefix.shape[1])
+    cache = init_cache(cfg, B, max_len or T)
+    x = _embed(params, cfg, tokens, prefix)
+    h, cache = _scan_layers(params, cfg, x, cache, jnp.int32(0),
+                            window=cfg.sliding_window or None)
+    logits = _logits(params, cfg, h[:, -1:])
+    return logits, cache
+
+
+def decode_step(params: dict, cfg: ModelConfig, cache: dict,
+                tokens: jnp.ndarray, pos: jnp.ndarray):
+    """One autoregressive step. tokens: [B, 1] (or [B, 1, nq]); pos: scalar
+    int32 — the number of positions already in the cache."""
+    x = _embed(params, cfg, tokens, None)
+    h, cache = _scan_layers(params, cfg, x, cache, pos,
+                            window=cfg.sliding_window or None)
+    return _logits(params, cfg, h), cache

@@ -1,0 +1,302 @@
+"""Shared neural-network primitives (pure JAX, no framework deps).
+
+All functions are functional: params in, activations out. Attention is
+implemented as a scan over query chunks with streaming softmax — the same
+math as the Pallas flash kernel in `repro.kernels.flash_attention` (which is
+the TPU runtime path); this keeps prefill memory O(chunk * seq) so the
+512-device dry-run lowers without multi-GB attention buffers.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+
+NEG_INF = -1e30
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * scale.astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(hd: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: [..., T, H, hd]; positions: [..., T] (broadcastable)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # [hd/2]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [..., T, hd/2]
+    ang = ang[..., None, :]                             # [..., T, 1, hd/2]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (chunked-softmax reference; mirrors the flash kernel)
+# ---------------------------------------------------------------------------
+
+def _mask(q_pos: jnp.ndarray, k_pos: jnp.ndarray, window: int) -> jnp.ndarray:
+    """[Tq, Tk] boolean mask: causal, optionally sliding-window."""
+    m = k_pos[None, :] <= q_pos[:, None]
+    if window > 0:
+        m &= k_pos[None, :] > q_pos[:, None] - window
+    return m
+
+
+def attention_unchunked(q, k, v, q_pos, k_pos, window: int = 0):
+    """Single-einsum attention: materializes [B, KV, G, Tq, Tk] logits.
+    Used by the seq-sharded (context-parallel) prefill variant, where the
+    partitioner splits Tq across the `model` axis — a scan over query
+    chunks would serialize that dimension instead (§Perf hillclimb #1)."""
+    B, Tq, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, Tq, KV, G, hd).astype(jnp.float32)
+    s = jnp.einsum("bqkgh,bskh->bkgqs", qg, k.astype(jnp.float32))
+    s = s * (hd ** -0.5)
+    m = _mask(q_pos, k_pos, window)
+    s = jnp.where(m[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskh->bqkgh", p, v.astype(jnp.float32))
+    return o.reshape(B, Tq, H, hd).astype(q.dtype)
+
+
+def attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+              q_pos: jnp.ndarray, k_pos: jnp.ndarray, window: int = 0,
+              block_q: int = 256, block_k: int = 1024) -> jnp.ndarray:
+    """Grouped-query attention with streaming (online-softmax) blocking —
+    the same two-level tiling as the Pallas flash kernel, expressed in XLA.
+    q: [B, Tq, H, hd]; k, v: [B, Tk, KV, hd]; positions: [Tq], [Tk].
+    Peak memory is O(B * H * block_q * block_k), independent of Tq * Tk.
+    """
+    B, Tq, H, hd = q.shape
+    Tk, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    scale = hd ** -0.5
+    qg = q.reshape(B, Tq, KV, G, hd)
+
+    def kv_blocks(arr, bk):
+        n = Tk // bk
+        return arr.reshape(B, n, bk, KV, hd).transpose(1, 0, 2, 3, 4)
+
+    def q_chunk(qc, qp):
+        """qc: [B, c, KV, G, hd]; streaming softmax over K blocks."""
+        c = qc.shape[1]
+        qf = qc.astype(jnp.float32)
+
+        def k_step(carry, inp):
+            m_run, l_run, o_run = carry
+            kb, vb, kp = inp                     # [B, bk, KV, hd], [bk]
+            logits = jnp.einsum("bqkgh,bskh->bkgqs", qf,
+                                kb.astype(jnp.float32)) * scale
+            msk = _mask(qp, kp, window)          # [c, bk]
+            logits = jnp.where(msk[None, None, None], logits, NEG_INF)
+            m_new = jnp.maximum(m_run, logits.max(axis=-1))
+            alpha = jnp.exp(m_run - m_new)
+            p = jnp.exp(logits - m_new[..., None])
+            l_new = l_run * alpha + p.sum(axis=-1)
+            o_new = (o_run * alpha[..., None]
+                     + jnp.einsum("bkgqs,bskh->bkgqh", p,
+                                  vb.astype(jnp.float32)))
+            return (m_new, l_new, o_new), None
+
+        if Tk <= block_k:
+            (m_f, l_f, o_f), _ = k_step(
+                (jnp.full((B, KV, G, c), NEG_INF, jnp.float32),
+                 jnp.zeros((B, KV, G, c), jnp.float32),
+                 jnp.zeros((B, KV, G, c, hd), jnp.float32)),
+                (k, v, k_pos))
+        else:
+            assert Tk % block_k == 0, (Tk, block_k)
+            kb = kv_blocks(k, block_k)
+            vb = kv_blocks(v, block_k)
+            kpb = k_pos.reshape(Tk // block_k, block_k)
+            (m_f, l_f, o_f), _ = jax.lax.scan(
+                k_step,
+                (jnp.full((B, KV, G, c), NEG_INF, jnp.float32),
+                 jnp.zeros((B, KV, G, c), jnp.float32),
+                 jnp.zeros((B, KV, G, c, hd), jnp.float32)),
+                (kb, vb, kpb))
+        out = o_f / jnp.clip(l_f, 1e-30)[..., None]     # [B, KV, G, c, hd]
+        return out.transpose(0, 3, 1, 2, 4).astype(q.dtype)
+
+    if Tq <= block_q:
+        out = q_chunk(qg, q_pos)
+    else:
+        assert Tq % block_q == 0, (Tq, block_q)
+        n = Tq // block_q
+        qs = qg.reshape(B, n, block_q, KV, G, hd).transpose(1, 0, 2, 3, 4, 5)
+        ps = q_pos.reshape(n, block_q)
+        out = jax.lax.map(lambda t: q_chunk(*t), (qs, ps))
+        out = out.transpose(1, 0, 2, 3, 4, 5).reshape(B, Tq, KV, G, hd)
+    return out.reshape(B, Tq, H, hd)
+
+
+def attention_block_params(rng, cfg: ModelConfig, stacked: int | None = None):
+    """Init attention projection params; leading dim `stacked` if given."""
+    d, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    shapes = dict(
+        wq=(d, H * hd), wk=(d, KV * hd), wv=(d, KV * hd), wo=(H * hd, d))
+    keys = jax.random.split(rng, len(shapes) + 3)
+    out = {}
+    for (name, shp), key in zip(shapes.items(), keys):
+        full = shp if stacked is None else (stacked,) + shp
+        out[name] = (jax.random.normal(key, full, jnp.float32)
+                     * (shp[0] ** -0.5)).astype(cfg.jdtype)
+    if cfg.qkv_bias:
+        for name, width in [("bq", H * hd), ("bk", KV * hd), ("bv", KV * hd)]:
+            full = (width,) if stacked is None else (stacked, width)
+            out[name] = jnp.zeros(full, cfg.jdtype)
+    return out
+
+
+def attention_apply(p: dict, cfg: ModelConfig, x: jnp.ndarray,
+                    cache_kv: tuple[jnp.ndarray, jnp.ndarray] | None,
+                    pos0: jnp.ndarray, window: int | None = None):
+    """Apply one attention block.
+    x: [B, T, d].  cache_kv: (k_cache, v_cache) each [B, S, KV, hd] holding
+    positions [0, pos0); the block appends the new T keys/values.
+    Returns (out [B, T, d], new_cache_kv).
+    """
+    B, T, d = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    if window is None:
+        window = cfg.sliding_window
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, T, H, hd)
+    k = k.reshape(B, T, KV, hd)
+    v = v.reshape(B, T, KV, hd)
+    q_pos = pos0 + jnp.arange(T)
+    q = apply_rope(q, q_pos, cfg.rope_theta)
+    k = apply_rope(k, q_pos, cfg.rope_theta)
+    seqshard = getattr(cfg, "seq_shard_attention", False) and T > 1
+    if seqshard:
+        # Context parallelism for prefill: shard QUERIES over the `model`
+        # mesh axis (heads may not divide it — e.g. 12 heads on a 16-wide
+        # axis — which otherwise makes GSPMD replicate the whole attention
+        # 16x; §Perf hillclimb #1). K/V are gathered once and replicated.
+        # The unchunked einsum form is required: a scan over query chunks
+        # would serialize the very dimension being sharded.
+        from jax.sharding import PartitionSpec as P
+        for bx in (("pod", "data"), "data", None):
+            try:
+                q = jax.lax.with_sharding_constraint(
+                    q, P(bx, "model", None, None))
+                k = jax.lax.with_sharding_constraint(
+                    k, P(bx, None, None, None))
+                v = jax.lax.with_sharding_constraint(
+                    v, P(bx, None, None, None))
+                break
+            except Exception:
+                continue  # axis not in mesh / no ambient mesh
+    attn_fn = attention_unchunked if seqshard else attention
+    if cache_kv is None:
+        out = attn_fn(q, k, v, q_pos, q_pos, window=window)
+        new_cache = (k, v)
+    elif T > 1:
+        # Prefill (pos0 == 0 by convention): attend over the fresh K/V with
+        # the causal(+window) mask, then write them into the cache.
+        out = attn_fn(q, k, v, q_pos, q_pos, window=window)
+        kc, vc = cache_kv
+        S = kc.shape[1]
+        if window > 0 and S == window:
+            # Ring buffer: keep only the last S keys (slots are unique).
+            keep = min(T, S)
+            slot = (pos0 + jnp.arange(T)[-keep:]) % S
+            kc = kc.at[:, slot].set(k[:, -keep:])
+            vc = vc.at[:, slot].set(v[:, -keep:])
+        else:
+            kc = jax.lax.dynamic_update_slice_in_dim(kc, k, pos0, axis=1)
+            vc = jax.lax.dynamic_update_slice_in_dim(vc, v, pos0, axis=1)
+        new_cache = (kc, vc)
+    else:
+        # Decode: append one position, attend against the cache.
+        kc, vc = cache_kv
+        S = kc.shape[1]
+        if window > 0 and S == window:
+            slot = (pos0 + jnp.arange(T)) % S
+            kc = kc.at[:, slot].set(k)
+            vc = vc.at[:, slot].set(v)
+            # Absolute position stored in ring slot s: the largest
+            # p <= pos0 + T - 1 with p % S == s; negative -> never written.
+            ring_idx = jnp.arange(S)
+            last = pos0 + T - 1
+            k_pos_abs = last - ((last - ring_idx) % S)
+            k_pos_abs = jnp.where(k_pos_abs < 0, jnp.int32(2 ** 30), k_pos_abs)
+            out = attention(q, kc, vc, q_pos, k_pos_abs, window=window)
+        else:
+            kc = jax.lax.dynamic_update_slice_in_dim(kc, k, pos0, axis=1)
+            vc = jax.lax.dynamic_update_slice_in_dim(vc, v, pos0, axis=1)
+            k_pos = jnp.arange(S)
+            valid = k_pos < pos0 + T
+            kmask_pos = jnp.where(valid, k_pos, jnp.int32(2 ** 30))
+            out = attention(q, kc, vc, q_pos, kmask_pos, window=window)
+        new_cache = (kc, vc)
+    out = out.reshape(B, T, H * hd) @ p["wo"]
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+
+def mlp_params(rng, d: int, f: int, dtype, stacked: int | None = None):
+    k1, k2, k3 = jax.random.split(rng, 3)
+    def mk(key, shp, fan):
+        full = shp if stacked is None else (stacked,) + shp
+        return (jax.random.normal(key, full, jnp.float32) * fan ** -0.5
+                ).astype(dtype)
+    return dict(w1=mk(k1, (d, f), d), w3=mk(k2, (d, f), d), w2=mk(k3, (f, d), f))
+
+
+def mlp_apply(p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    return (jax.nn.silu(x @ p["w1"]) * (x @ p["w3"])) @ p["w2"]
+
+
+# ---------------------------------------------------------------------------
+# Chunked cross-entropy (never materializes [B, S, V] logits)
+# ---------------------------------------------------------------------------
+
+def _pick_chunk(S: int, target: int) -> int:
+    """Largest divisor of S that is <= target."""
+    for c in range(min(S, target), 0, -1):
+        if S % c == 0:
+            return c
+    return S
+
+
+def chunked_ce_loss(head: jnp.ndarray, xs: jnp.ndarray, targets: jnp.ndarray,
+                    chunk: int) -> jnp.ndarray:
+    """head: [d, V]; xs: [B, S, d]; targets: [B, S] int32. Mean NLL.
+    Scans over sequence chunks so [B, S, V] logits never materialize."""
+    B, S, d = xs.shape
+    chunk = _pick_chunk(S, chunk)
+    n = S // chunk
+
+    def body(carry, t):
+        xc, tc = t                                  # [B, c, d], [B, c]
+        logits = (xc @ head).astype(jnp.float32)    # [B, c, V]
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, tc[..., None], axis=-1)[..., 0]
+        return carry + jnp.sum(logz - gold), None
+
+    xs_c = xs.reshape(B, n, chunk, d).transpose(1, 0, 2, 3)
+    tg_c = targets.reshape(B, n, chunk).transpose(1, 0, 2)
+    total, _ = jax.lax.scan(body, jnp.float32(0.0), (xs_c, tg_c))
+    return total / (B * S)

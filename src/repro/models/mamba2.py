@@ -1,0 +1,137 @@
+"""Mamba2 (SSD) token mixer — chunked exact scan, TPU-friendly.
+
+State-space update per head h with scalar decay a_t = exp(dt_t * A_h):
+    S_t = a_t * S_{t-1} + dt_t * (x_t ⊗ B_t)        S: [hp, N]
+    y_t = S_t @ C_t + D_h * x_t
+
+Training uses the chunked SSD algorithm (chunk Q=128): an intra-chunk
+quadratic term with decay-ratio mask plus an inter-chunk carried state —
+mathematically exact for scalar-per-head decay, and it keeps the HLO free
+of length-T sequential loops (one lax.scan over T/Q chunks of einsums, which
+is also how the Pallas `ssm_scan` kernel tiles VMEM).
+
+Decode is the O(1) single-step recurrence on the carried state.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+
+CHUNK = 128
+
+
+def mamba2_params(rng, cfg: ModelConfig, stacked: int | None = None) -> dict:
+    d, di, N, nh = cfg.d_model, cfg.di, cfg.ssm_state, cfg.ssm_heads
+    keys = jax.random.split(rng, 8)
+
+    def mk(key, shp, fan):
+        full = shp if stacked is None else (stacked,) + shp
+        return (jax.random.normal(key, full, jnp.float32) * fan ** -0.5
+                ).astype(cfg.jdtype)
+
+    def mkf(val, shp):
+        full = shp if stacked is None else (stacked,) + shp
+        return jnp.broadcast_to(val, full).astype(jnp.float32)
+
+    return dict(
+        wx=mk(keys[0], (d, di), d), wz=mk(keys[1], (d, di), d),
+        wB=mk(keys[2], (d, N), d), wC=mk(keys[3], (d, N), d),
+        wdt=mk(keys[4], (d, nh), d),
+        dt_bias=mkf(jnp.log(jnp.expm1(0.01)), (nh,)),
+        A_log=mkf(jnp.log(1.0), (nh,)),
+        D=mkf(1.0, (nh,)),
+        conv=mk(keys[5], (cfg.conv_width, di), cfg.conv_width),
+        wo=mk(keys[6], (di, d), di))
+
+
+def _causal_conv(x: jnp.ndarray, kernel: jnp.ndarray,
+                 conv_state: jnp.ndarray | None):
+    """Depthwise causal conv. x: [B, T, di]; kernel: [W, di];
+    conv_state: [B, W-1, di] trailing inputs from the previous call."""
+    W = kernel.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros(x.shape[:1] + (W - 1,) + x.shape[2:], x.dtype)
+    else:
+        pad = conv_state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)               # [B, T+W-1, di]
+    out = sum(xp[:, i:i + x.shape[1]] * kernel[i] for i in range(W))
+    new_state = xp[:, -(W - 1):]
+    return jax.nn.silu(out), new_state
+
+
+def mamba2_apply(p: dict, cfg: ModelConfig, x: jnp.ndarray,
+                 cache: dict | None):
+    """x: [B, T, d] -> ([B, T, d], new_cache).
+    cache = dict(ssm=[B, nh, hp, N], conv=[B, W-1, di]) or None (training)."""
+    B, T, d = x.shape
+    di, N, nh, hp = cfg.di, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    z = jax.nn.silu(x @ p["wz"])                         # [B, T, di]
+    xin = x @ p["wx"]
+    xin, conv_state = _causal_conv(
+        xin, p["conv"], None if cache is None else cache["conv"])
+    Bm = (x @ p["wB"]).astype(jnp.float32)               # [B, T, N]
+    Cm = (x @ p["wC"]).astype(jnp.float32)               # [B, T, N]
+    dt = jax.nn.softplus((x @ p["wdt"]).astype(jnp.float32)
+                         + p["dt_bias"])                 # [B, T, nh]
+    A = -jnp.exp(p["A_log"])                             # [nh]
+    xh = xin.reshape(B, T, nh, hp).astype(jnp.float32)
+    la = dt * A                                          # log decay [B, T, nh]
+    S0 = (jnp.zeros((B, nh, hp, N), jnp.float32) if cache is None
+          else cache["ssm"].astype(jnp.float32))
+
+    if T == 1:
+        a = jnp.exp(la[:, 0])                            # [B, nh]
+        S = (S0 * a[..., None, None]
+             + dt[:, 0, :, None, None] * xh[:, 0][..., None]
+             * Bm[:, 0][:, None, None, :])
+        y = jnp.einsum("bhpn,bn->bhp", S, Cm[:, 0])[:, None]
+        y = y.reshape(B, 1, nh, hp)
+        S_out = S
+    else:
+        Q = CHUNK if T % CHUNK == 0 else (T if T < CHUNK else None)
+        assert Q is not None, f"T={T} must be a multiple of {CHUNK} or < {CHUNK}"
+        nch = T // Q
+        la_c = la.reshape(B, nch, Q, nh).transpose(1, 0, 2, 3)
+        xh_c = xh.reshape(B, nch, Q, nh, hp).transpose(1, 0, 2, 3, 4)
+        Bm_c = Bm.reshape(B, nch, Q, N).transpose(1, 0, 2, 3)
+        Cm_c = Cm.reshape(B, nch, Q, N).transpose(1, 0, 2, 3)
+        dt_c = dt.reshape(B, nch, Q, nh).transpose(1, 0, 2, 3)
+
+        def chunk_step(S, inp):
+            lac, xc, Bc, Cc, dtc = inp
+            # cumulative log-decay within the chunk, inclusive: P_t
+            cum = jnp.cumsum(lac, axis=1)                # [B, Q, nh]
+            # intra-chunk kernel M[t,s] = exp(P_t - P_s) * (C_t . B_s) * dt_s
+            rel = cum[:, :, None, :] - cum[:, None, :, :]    # [B, Q, Q, nh]
+            causal = jnp.tril(jnp.ones((Q, Q), bool))
+            decay = jnp.where(causal[None, :, :, None], jnp.exp(rel), 0.0)
+            cb = jnp.einsum("bqn,bsn->bqs", Cc, Bc)          # [B, Q, Q]
+            M = decay * cb[..., None] * dtc[:, None, :, :]   # [B, Q, Q, nh]
+            y_intra = jnp.einsum("bqsh,bshp->bqhp", M, xc)
+            # inter-chunk: y_carry[t] = C_t . (exp(P_t) * S_prev)
+            y_carry = jnp.einsum("bqn,bhpn,bqh->bqhp",
+                                 Cc, S, jnp.exp(cum))
+            # state update: S' = exp(P_Q) S + sum_s exp(P_Q - P_s) dt_s x_s B_s^T
+            tail = jnp.exp(cum[:, -1:, :] - cum)             # [B, Q, nh]
+            S_new = (S * jnp.exp(cum[:, -1])[..., None, None]
+                     + jnp.einsum("bsh,bshp,bsn->bhpn",
+                                  tail * dtc, xc, Bc))
+            return S_new, y_intra + y_carry
+
+        S_out, ys = jax.lax.scan(chunk_step, S0,
+                                 (la_c, xh_c, Bm_c, Cm_c, dt_c))
+        y = ys.transpose(1, 0, 2, 3, 4).reshape(B, T, nh, hp)
+
+    y = y + p["D"][:, None] * xh.reshape(B, T, nh, hp)
+    out = (y.reshape(B, T, di).astype(x.dtype) * z) @ p["wo"]
+    new_cache = dict(ssm=S_out.astype(jnp.float32), conv=conv_state)
+    return out, new_cache
+
+
+def mamba2_cache_init(cfg: ModelConfig, B: int, dtype=jnp.float32) -> dict:
+    return dict(
+        ssm=jnp.zeros((B, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state),
+                      jnp.float32),
+        conv=jnp.zeros((B, cfg.conv_width - 1, cfg.di), dtype))

@@ -1,0 +1,143 @@
+"""Mixture-of-Experts channel mixer (scatter-dispatch, capacity-based).
+
+TPU-native design: tokens are dispatched into dense per-expert buffers
+[E, C, d] via cumsum-ranked scatter (no [N, E, C] one-hot einsum), expert
+FFNs run as one grouped einsum over the stacked expert weights, and results
+are combined by gather. Under expert-parallel sharding (E over the `model`
+mesh axis) GSPMD lowers the dispatch/combine into all-to-all — the
+collective the paper's MoE-serving discussion revolves around.
+
+Compute cost is capacity-bound: E*C = N * top_k * capacity_factor tokens,
+so HLO FLOPs reflect ACTIVE parameters (6*N_active*D), which is what the
+roofline analysis checks against.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import mlp_apply, mlp_params
+
+
+def moe_params(rng, cfg: ModelConfig, stacked: int | None = None) -> dict:
+    d, f, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    k1, k2, k3, k4, k5 = jax.random.split(rng, 5)
+
+    def mk(key, shp, fan):
+        full = shp if stacked is None else (stacked,) + shp
+        return (jax.random.normal(key, full, jnp.float32) * fan ** -0.5
+                ).astype(cfg.jdtype)
+
+    p = dict(
+        router=mk(k1, (d, E), d).astype(jnp.float32),
+        w1=mk(k2, (E, d, f), d), w3=mk(k3, (E, d, f), d),
+        w2=mk(k4, (E, f, d), f))
+    if cfg.moe_w8a8:
+        # INT8 weight storage (the paper's nu=0.5 INT8 tier): per-expert,
+        # per-out-channel symmetric scales.
+        for name in ("w1", "w3", "w2"):
+            w = p[name].astype(jnp.float32)
+            scale = jnp.max(jnp.abs(w), axis=-2, keepdims=True) / 127.0
+            p[name] = jnp.round(w / jnp.maximum(scale, 1e-9)).astype(jnp.int8)
+            p[name + "_s"] = scale.astype(jnp.float32)
+    if cfg.shared_expert_ff:
+        p["shared"] = mlp_params(k5, d, cfg.shared_expert_ff, cfg.jdtype,
+                                 stacked=stacked)
+    return p
+
+
+def _quant_act(x: jnp.ndarray):
+    """Dynamic per-row symmetric int8 quantization of activations."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1,
+                    keepdims=True) / 127.0
+    q = jnp.round(x.astype(jnp.float32)
+                  / jnp.maximum(scale, 1e-9)).astype(jnp.int8)
+    return q, scale
+
+
+def _w8a8_ffn(p: dict, buf: jnp.ndarray) -> jnp.ndarray:
+    """Expert SwiGLU with INT8 x INT8 -> INT32 matmuls (W8A8). Halves the
+    expert weight stream — the decode phase's dominant HBM traffic — at the
+    paper's mu=1.15 accuracy cost (§Perf hillclimb #3)."""
+    qb, bs = _quant_act(buf)                               # [E,C,d], [E,C,1]
+    h1 = jnp.einsum("ecd,edf->ecf", qb, p["w1"],
+                    preferred_element_type=jnp.int32)
+    h3 = jnp.einsum("ecd,edf->ecf", qb, p["w3"],
+                    preferred_element_type=jnp.int32)
+    h1 = h1.astype(jnp.float32) * bs * p["w1_s"]
+    h3 = h3.astype(jnp.float32) * bs * p["w3_s"]
+    h = jax.nn.silu(h1) * h3
+    qh, hs = _quant_act(h)
+    ho = jnp.einsum("ecf,efd->ecd", qh, p["w2"],
+                    preferred_element_type=jnp.int32)
+    return (ho.astype(jnp.float32) * hs * p["w2_s"]).astype(buf.dtype)
+
+
+def moe_apply(p: dict, cfg: ModelConfig, x: jnp.ndarray) -> jnp.ndarray:
+    """x: [B, T, d] -> [B, T, d]."""
+    B, T, d = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    N = B * T
+    xf = x.reshape(N, d)
+    # Router (fp32 for stable softmax/top-k).
+    logits = xf.astype(jnp.float32) @ p["router"]          # [N, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, idx = jax.lax.top_k(probs, k)                    # [N, k]
+    gate = gate / jnp.clip(gate.sum(-1, keepdims=True), 1e-9)
+
+    C = max(1, int(N * k * cfg.capacity_factor / E))
+    e_flat = idx.reshape(-1)                               # [N*k]
+    # Rank of each (token, choice) within its expert: cumsum of one-hot.
+    onehot = jax.nn.one_hot(e_flat, E, dtype=jnp.int32)    # [N*k, E]
+    pos = (jnp.cumsum(onehot, axis=0) - onehot)            # exclusive prefix
+    slot = jnp.take_along_axis(pos, e_flat[:, None], axis=1)[:, 0]  # [N*k]
+    keep = slot < C                                        # capacity drop
+    slot_c = jnp.where(keep, slot, 0)
+    e_safe = jnp.where(keep, e_flat, 0)
+
+    # Dispatch: scatter token copies into [E, C, d] buffers.
+    xk = jnp.repeat(xf, k, axis=0)                         # [N*k, d]
+    buf = jnp.zeros((E, C, d), x.dtype)
+    buf = buf.at[e_safe, slot_c].add(jnp.where(keep[:, None], xk, 0))
+    if cfg.moe_expert_shard_constraint:
+        # Pin the dispatch buffers to expert-parallel layout so the
+        # token->expert movement lowers as all-to-all instead of a full
+        # buffer all-reduce (§Perf hillclimb #2).
+        from jax.sharding import PartitionSpec as P
+        try:
+            buf = jax.lax.with_sharding_constraint(buf, P("model", None, None))
+        except Exception:
+            pass  # no ambient mesh
+
+    # Expert FFN (grouped SwiGLU einsum over stacked expert weights).
+    if cfg.moe_w8a8 and "w1_s" in p:
+        ho = _w8a8_ffn(p, buf)
+    else:
+        h1 = jnp.einsum("ecd,edf->ecf", buf, p["w1"])
+        h3 = jnp.einsum("ecd,edf->ecf", buf, p["w3"])
+        ho = jnp.einsum("ecf,efd->ecd", jax.nn.silu(h1) * h3, p["w2"])
+    if cfg.moe_expert_shard_constraint:
+        from jax.sharding import PartitionSpec as P
+        try:
+            ho = jax.lax.with_sharding_constraint(ho, P("model", None, None))
+        except Exception:
+            pass
+
+    # Combine: gather each copy's result, weight by its gate.
+    out_k = ho[e_safe, slot_c]                             # [N*k, d]
+    out_k = jnp.where(keep[:, None], out_k, 0)
+    out = (out_k.reshape(N, k, d)
+           * gate[..., None].astype(x.dtype)).sum(axis=1)  # [N, d]
+
+    if "shared" in p:
+        out = out + mlp_apply(p["shared"], xf)
+    return out.reshape(B, T, d)
+
+
+def load_balance_loss(logits: jnp.ndarray, idx: jnp.ndarray, E: int) -> jnp.ndarray:
+    """Switch-style auxiliary loss (exported for the training loop)."""
+    probs = jax.nn.softmax(logits, axis=-1)
+    me = probs.mean(axis=0)
+    ce = jnp.bincount(idx.reshape(-1), length=E) / idx.size
+    return E * jnp.sum(me * ce)

@@ -1,0 +1,133 @@
+"""RWKV6 ("Finch") token mixer with data-dependent decay.
+
+Per head (hd = 64): state S ∈ R^{hd × hd},
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    y_t = r_t (S_{t-1} + diag(u) k_t v_t^T)
+with per-channel decay w_t = exp(-exp(w0 + LoRA(x_t))) — the data-dependent
+decay that distinguishes RWKV6 from RWKV4/5 — and token-shift interpolation
+on every projection input.
+
+Training scans chunks: within a chunk the recurrence is evaluated in closed
+form with cumulative decay products (exact), so HLO contains T/chunk scan
+steps of dense einsums rather than T sequential steps. Decode is O(1).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+
+CHUNK = 64
+LORA_R = 64
+
+
+def rwkv6_params(rng, cfg: ModelConfig, stacked: int | None = None) -> dict:
+    d = cfg.d_model
+    keys = jax.random.split(rng, 9)
+
+    def mk(key, shp, fan):
+        full = shp if stacked is None else (stacked,) + shp
+        return (jax.random.normal(key, full, jnp.float32) * fan ** -0.5
+                ).astype(cfg.jdtype)
+
+    def mkf(val, shp):
+        full = shp if stacked is None else (stacked,) + shp
+        return jnp.broadcast_to(jnp.asarray(val, jnp.float32), full).copy()
+
+    H, hd = d // 64, 64
+    return dict(
+        wr=mk(keys[0], (d, d), d), wk=mk(keys[1], (d, d), d),
+        wv=mk(keys[2], (d, d), d), wg=mk(keys[3], (d, d), d),
+        wo=mk(keys[4], (d, d), d),
+        # data-dependent decay: w0 + B(A x)
+        w0=mkf(-6.0, (d,)),
+        wA=mk(keys[5], (d, LORA_R), d), wB=mk(keys[6], (LORA_R, d), LORA_R),
+        u=mkf(0.5, (H, hd)),
+        mu=mkf(0.5, (5, d)),           # token-shift lerp per projection
+    )
+
+
+def _shift(x: jnp.ndarray, x_prev: jnp.ndarray | None) -> jnp.ndarray:
+    """x_{t-1} sequence; x_prev is the last token of the previous call."""
+    first = (jnp.zeros_like(x[:, :1]) if x_prev is None
+             else x_prev[:, None].astype(x.dtype))
+    return jnp.concatenate([first, x[:, :-1]], axis=1)
+
+
+def rwkv6_apply(p: dict, cfg: ModelConfig, x: jnp.ndarray,
+                cache: dict | None):
+    """x: [B, T, d] -> ([B, T, d], cache(state=[B,H,hd,hd], xprev=[B,d]))."""
+    B, T, d = x.shape
+    H, hd = d // 64, 64
+    xs = _shift(x, None if cache is None else cache["xprev"])
+    mu = p["mu"].astype(x.dtype)
+    def mix(i):
+        return x * mu[i] + xs * (1 - mu[i])
+    r = (mix(0) @ p["wr"]).reshape(B, T, H, hd).astype(jnp.float32)
+    k = (mix(1) @ p["wk"]).reshape(B, T, H, hd).astype(jnp.float32)
+    v = (mix(2) @ p["wv"]).reshape(B, T, H, hd).astype(jnp.float32)
+    g = jax.nn.silu(mix(3) @ p["wg"])
+    lw = (p["w0"].astype(jnp.float32)
+          + (mix(4).astype(jnp.float32) @ p["wA"].astype(jnp.float32))
+          @ p["wB"].astype(jnp.float32))                      # [B, T, d]
+    logw = -jnp.exp(lw).reshape(B, T, H, hd)                  # log decay < 0
+    u = p["u"].astype(jnp.float32)
+
+    S0 = (jnp.zeros((B, H, hd, hd), jnp.float32) if cache is None
+          else cache["state"].astype(jnp.float32))
+
+    if T == 1:
+        kv = k[:, 0][..., None] * v[:, 0][..., None, :]        # [B,H,hd,hd]
+        y = jnp.einsum("bhk,bhkv->bhv", r[:, 0],
+                       S0 + u[..., None] * kv)[:, None]        # [B,1,H,hd]
+        S_out = jnp.exp(logw[:, 0])[..., None] * S0 + kv
+        y = y.reshape(B, 1, H, hd)
+    else:
+        Q = CHUNK if T % CHUNK == 0 else (T if T < CHUNK else None)
+        assert Q is not None, f"T={T} must divide chunk {CHUNK} or be smaller"
+        nch = T // Q
+
+        def to_chunks(a):
+            return a.reshape(B, nch, Q, H, hd).transpose(1, 0, 2, 3, 4)
+
+        rc, kc, vc, lwc = map(to_chunks, (r, k, v, logw))
+
+        def chunk_step(S, inp):
+            rq, kq, vq, lq = inp                # [B, Q, H, hd]
+            cum = jnp.cumsum(lq, axis=1)        # inclusive cumulative log-decay
+            cum_excl = cum - lq                 # exclusive
+            # intra-chunk: y[t] += sum_{s<t} (r_t * prodw_{s+1..t-1}... ) exact:
+            # contribution of s to t (s < t): r_t . diag(exp(cum_excl_t - cum_s))
+            #   ... note state at t-1 includes k_s v_s^T decayed by w_{s+1..t-1}
+            #   = exp(cum_excl[t] - cum[s])  (zero extra decay when s = t-1)
+            rel = cum_excl[:, :, None] - cum[:, None, :]       # [B,Tq,Ts,H,hd]
+            causal = jnp.tril(jnp.ones((Q, Q), bool), k=-1)
+            dec = jnp.where(causal[None, :, :, None, None], jnp.exp(rel), 0.0)
+            att = jnp.einsum("bthk,btshk,bshk->bths", rq, dec, kq)
+            y_intra = jnp.einsum("bths,bshv->bthv", att, vq)
+            # bonus (s = t): r_t . diag(u) k_t v_t^T
+            bonus = jnp.einsum("bthk,hk,bthk->bth", rq, u, kq)
+            y_intra = y_intra + bonus[..., None] * vq
+            # carry: y[t] += r_t exp(cum_excl[t]) . S
+            y_carry = jnp.einsum("bthk,bthk,bhkv->bthv",
+                                 rq, jnp.exp(cum_excl), S)
+            # state: S' = diag(exp(cum[-1])) S + sum_s exp(cum[-1]-cum[s]) k_s v_s^T
+            tail = jnp.exp(cum[:, -1:] - cum)                  # [B, Q, H, hd]
+            S_new = (jnp.exp(cum[:, -1])[..., None] * S
+                     + jnp.einsum("bshk,bshv->bhkv", tail * kq, vq))
+            return S_new, y_intra + y_carry
+
+        S_out, ys = jax.lax.scan(chunk_step, S0, (rc, kc, vc, lwc))
+        y = ys.transpose(1, 0, 2, 3, 4).reshape(B, T, H, hd)
+
+    # Per-head group norm, then gate and output projection.
+    yn = y * jax.lax.rsqrt(jnp.mean(y * y, axis=-1, keepdims=True) + 1e-6)
+    out = (yn.reshape(B, T, d).astype(x.dtype) * g) @ p["wo"]
+    return out, dict(state=S_out, xprev=x[:, -1].astype(jnp.float32))
+
+
+def rwkv6_cache_init(cfg: ModelConfig, B: int, dtype=jnp.float32) -> dict:
+    d = cfg.d_model
+    return dict(state=jnp.zeros((B, d // 64, 64, 64), jnp.float32),
+                xprev=jnp.zeros((B, d), jnp.float32))

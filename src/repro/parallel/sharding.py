@@ -1,0 +1,208 @@
+"""Rule-based, divisibility-checked sharding for every architecture.
+
+Strategy (Megatron-TP + FSDP hybrid, TPU-native):
+  * the `model` mesh axis carries tensor parallelism: projection output dims,
+    expert dims (expert parallelism), SSM inner dims, attention head dims;
+  * the `data` (and `pod`) axes carry the batch AND fully-sharded parameter
+    storage (FSDP) on a second tensor dim;
+  * every rule checks divisibility against the mesh axis sizes and falls
+    back to replication — this is what lets ten heterogeneous architectures
+    (odd vocab 92553, 14-head attention, 384-expert MoE) share one codebase.
+
+GSPMD propagates activation shardings from these seeds; the dry-run records
+the collectives it inserts (all-gather/reduce-scatter for FSDP, all-reduce
+for TP contractions, all-to-all for expert dispatch).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def mesh_axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def batch_axes(mesh: Mesh):
+    """Axes carrying the global batch."""
+    ax = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    return ax if ax else None
+
+
+def fsdp_axes(mesh: Mesh):
+    """Axes carrying fully-sharded parameter storage (same as batch)."""
+    return batch_axes(mesh)
+
+
+def _fits(dim: int, mesh: Mesh, axes) -> bool:
+    return axes is not None and dim % mesh_axis_size(mesh, axes) == 0
+
+
+def _matrix_spec(shape: tuple[int, ...], mesh: Mesh, n_stack: int,
+                 model_dim: int, fsdp_dim: int) -> P:
+    """Spec for a (possibly stacked) matrix: `model` on model_dim, FSDP on
+    fsdp_dim, each guarded by divisibility."""
+    spec: list[Any] = [None] * len(shape)
+    if _fits(shape[model_dim], mesh, "model" if "model" in mesh.axis_names
+             else None):
+        spec[model_dim] = "model"
+    fx = fsdp_axes(mesh)
+    if fsdp_dim != model_dim and _fits(shape[fsdp_dim], mesh, fx):
+        spec[fsdp_dim] = fx
+    del n_stack
+    return P(*spec)
+
+
+# Parameter-name classification: which dim gets TP ('model').
+_COL_PARALLEL = {"wq", "wk", "wv", "w1", "w3", "wx", "wz", "wB", "wC",
+                 "wdt", "wA", "wg", "wr"}
+_ROW_PARALLEL = {"wo", "w2", "wB_out"}
+_REPLICATED = {"ln", "ln1", "ln2", "final_norm", "dt_bias", "A_log", "D",
+               "u", "mu", "w0", "router", "bq", "bk", "bv"}
+
+
+def _param_spec(path: tuple[str, ...], shape: tuple[int, ...],
+                mesh: Mesh) -> P:
+    name = path[-1]
+    in_moe = "moe" in path
+    nd = len(shape)
+    if name in _REPLICATED or nd <= 1:
+        return P(*([None] * nd))
+    if name == "embed":
+        # [V, d] or [nq, V, d]
+        vdim, ddim = nd - 2, nd - 1
+        spec: list[Any] = [None] * nd
+        if _fits(shape[vdim], mesh, "model"):
+            spec[vdim] = "model"
+            if _fits(shape[ddim], mesh, fsdp_axes(mesh)):
+                spec[ddim] = fsdp_axes(mesh)
+        elif _fits(shape[ddim], mesh, "model"):
+            spec[ddim] = "model"
+        return P(*spec)
+    if name == "head":
+        # [d, V] or [nq, d, V]
+        ddim, vdim = nd - 2, nd - 1
+        spec = [None] * nd
+        if _fits(shape[vdim], mesh, "model"):
+            spec[vdim] = "model"
+            if _fits(shape[ddim], mesh, fsdp_axes(mesh)):
+                spec[ddim] = fsdp_axes(mesh)
+        elif _fits(shape[ddim], mesh, "model"):
+            spec[ddim] = "model"
+        return P(*spec)
+    if name == "prefix_proj":
+        return _matrix_spec(shape, mesh, 0, nd - 1, nd - 2)
+    if in_moe and name in ("w1", "w3", "w2") and nd >= 3:
+        # Expert-parallel: [.., E, d, f] / [.., E, f, d] — E over `model`,
+        # the wide inner dim over FSDP.
+        edim = nd - 3
+        spec = [None] * nd
+        if _fits(shape[edim], mesh, "model"):
+            spec[edim] = "model"
+            wide = nd - 1 if name in ("w1", "w3") else nd - 2
+            if _fits(shape[wide], mesh, fsdp_axes(mesh)):
+                spec[wide] = fsdp_axes(mesh)
+        else:  # fall back to plain TP on the f dim
+            wide = nd - 1 if name in ("w1", "w3") else nd - 2
+            if _fits(shape[wide], mesh, "model"):
+                spec[wide] = "model"
+        return P(*spec)
+    if name == "conv":
+        spec = [None] * nd
+        if _fits(shape[-1], mesh, "model"):
+            spec[-1] = "model"
+        return P(*spec)
+    if name in _COL_PARALLEL:
+        return _matrix_spec(shape, mesh, 0, nd - 1, nd - 2)
+    if name in _ROW_PARALLEL:
+        return _matrix_spec(shape, mesh, 0, nd - 2, nd - 1)
+    return P(*([None] * nd))
+
+
+def param_specs(params: Any, mesh: Mesh) -> Any:
+    """PartitionSpec pytree matching `params`."""
+    flat, tdef = jax.tree_util.tree_flatten_with_path(params)
+    specs = []
+    for path, leaf in flat:
+        names = tuple(getattr(k, "key", getattr(k, "idx", "?"))
+                      for k in path)
+        names = tuple(str(n) for n in names)
+        specs.append(_param_spec(names, leaf.shape, mesh))
+    return jax.tree_util.tree_unflatten(tdef, specs)
+
+
+def opt_state_specs(params_spec: Any) -> dict:
+    """AdamW moments inherit the parameter sharding (ZeRO-style)."""
+    return dict(mu=params_spec, nu=params_spec, step=P())
+
+
+def batch_spec(mesh: Mesh, shape: tuple[int, ...]) -> P:
+    """Batch-leading arrays: shard dim 0 over ('pod','data') if divisible."""
+    bx = batch_axes(mesh)
+    if _fits(shape[0], mesh, bx):
+        return P(bx, *([None] * (len(shape) - 1)))
+    # try 'data' alone (multi-pod, batch not divisible by pod*data)
+    if "data" in (bx or ()) and shape[0] % mesh.shape["data"] == 0:
+        return P("data", *([None] * (len(shape) - 1)))
+    return P(*([None] * len(shape)))
+
+
+def cache_specs(cache: Any, mesh: Mesh, prefer_hd: bool = False) -> Any:
+    """KV/state caches: batch dim over data axes; heads (or window/seq) over
+    `model` when divisible. Cache trees are stacked with a leading layer
+    (or super-block) dim followed by batch.
+
+    prefer_hd: for attention caches whose KV-head count does not divide the
+    `model` axis, shard the head_dim instead of the sequence — decode then
+    all-reduces per-step logits instead of all-gathering the cache
+    (§Perf hillclimb #4)."""
+    flat, tdef = jax.tree_util.tree_flatten_with_path(cache)
+    specs = []
+    for path, leaf in flat:
+        names = tuple(str(getattr(k, "key", getattr(k, "idx", "?")))
+                      for k in path)
+        shp = leaf.shape
+        nd = len(shp)
+        s: list[Any] = [None] * nd
+        bx = batch_axes(mesh)
+        bdim = 1 if nd >= 2 else 0
+        # mamba group caches are [n_super, E, B, ...]
+        if "mamba" in names and nd >= 3:
+            bdim = 2
+        if nd > bdim and _fits(shp[bdim], mesh, bx):
+            s[bdim] = bx
+        if "ssm" in names:
+            # [..., B, nh, hp, N] -> shard nh over model
+            if _fits(shp[bdim + 1], mesh, "model"):
+                s[bdim + 1] = "model"
+        elif "state" in names:
+            # rwkv [..., B, H, hd, hd] -> shard H
+            if _fits(shp[bdim + 1], mesh, "model"):
+                s[bdim + 1] = "model"
+        elif "conv" in names or "xprev" in names:
+            if _fits(shp[-1], mesh, "model"):
+                s[-1] = "model"
+        elif nd == 5:
+            # attention cache [L, B, S, KV, hd]: KV over model, else S
+            # (or hd under prefer_hd)
+            if _fits(shp[3], mesh, "model"):
+                s[3] = "model"
+            elif prefer_hd and _fits(shp[4], mesh, "model"):
+                s[4] = "model"
+            elif _fits(shp[2], mesh, "model"):
+                s[2] = "model"
+        specs.append(P(*s))
+    return jax.tree_util.tree_unflatten(tdef, specs)
+
+
+def to_shardings(spec_tree: Any, mesh: Mesh) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,77 @@
+"""Batched serving engine: prefill + decode with a planner-chosen config.
+
+This is the execution layer the paper's allocator plans FOR. A `Deployment`
+corresponds to one active (model, tier) pair with its (TP, PP) config; the
+engine exposes `prefill_batch` / `decode_batch` jitted steps and a simple
+continuous-batching loop for the end-to-end example.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import decoder
+from ..models.config import ModelConfig
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray              # [T] int32
+    max_new_tokens: int
+    arrived_s: float = 0.0
+    first_token_s: float | None = None
+    done_s: float | None = None
+    output: list[int] = dataclasses.field(default_factory=list)
+
+
+class Engine:
+    """Single-deployment engine (one model, one parallelism config)."""
+
+    def __init__(self, cfg: ModelConfig, params: Any, max_len: int,
+                 max_batch: int):
+        self.cfg = cfg
+        self.params = params
+        self.max_len = max_len
+        self.max_batch = max_batch
+        self._prefill = jax.jit(
+            lambda p, t: decoder.prefill(p, cfg, t, max_len=max_len))
+        self._decode = jax.jit(
+            lambda p, c, t, pos: decoder.decode_step(p, cfg, c, t, pos))
+
+    def generate(self, requests: list[Request],
+                 greedy: bool = True) -> list[Request]:
+        """Static-batch generation: pad prompts to a common length, prefill
+        once, decode until every request has its tokens."""
+        t_start = time.perf_counter()
+        B = len(requests)
+        assert B <= self.max_batch
+        Tp = max(len(r.prompt) for r in requests)
+        toks = np.zeros((B, Tp), np.int32)
+        for b, r in enumerate(requests):
+            toks[b, -len(r.prompt):] = r.prompt      # left-pad
+        logits, cache = self._prefill(self.params, jnp.asarray(toks))
+        step_tokens = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        for r, t in zip(requests, np.asarray(step_tokens)):
+            r.output.append(int(t))
+            r.first_token_s = time.perf_counter() - t_start
+        n_new = max(r.max_new_tokens for r in requests)
+        pos = Tp
+        for _ in range(n_new - 1):
+            logits, cache = self._decode(self.params, cache,
+                                         step_tokens[:, None],
+                                         jnp.int32(pos))
+            step_tokens = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+            pos += 1
+            for r, t in zip(requests, np.asarray(step_tokens)):
+                if len(r.output) < r.max_new_tokens:
+                    r.output.append(int(t))
+        now = time.perf_counter() - t_start
+        for r in requests:
+            r.done_s = now
+        return requests

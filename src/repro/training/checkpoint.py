@@ -1,0 +1,80 @@
+"""Checkpointing: flat-key .npz shards + JSON manifest (no orbax offline).
+
+Arrays are saved host-side; under a mesh the caller should fully replicate
+or gather first (the train loop saves from `jax.device_get`). Keys are
+'/'-joined pytree paths so restore round-trips arbitrary nested dicts.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _flatten(tree: Any, prefix: str = "") -> dict[str, np.ndarray]:
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten(v, f"{prefix}{k}/"))
+    elif isinstance(tree, (tuple, list)):
+        for idx, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}__{idx}/"))
+    elif tree is None:
+        pass
+    else:
+        out[prefix[:-1]] = np.asarray(jax.device_get(tree))
+    return out
+
+
+def _unflatten(flat: dict[str, np.ndarray]) -> Any:
+    root: dict = {}
+    for key, val in flat.items():
+        parts = key.split("/")
+        node = root
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = val
+
+    def fix(node):
+        if not isinstance(node, dict):
+            return node
+        if node and all(re.fullmatch(r"__\d+", k) for k in node):
+            return tuple(fix(node[f"__{i}"]) for i in range(len(node)))
+        return {k: fix(v) for k, v in node.items()}
+
+    return fix(root)
+
+
+def save(path: str, tree: Any, meta: dict | None = None,
+         shard_mb: int = 512) -> None:
+    os.makedirs(path, exist_ok=True)
+    flat = _flatten(tree)
+    shards: list[dict[str, np.ndarray]] = [{}]
+    size = 0
+    for k, v in flat.items():
+        if size > shard_mb * 2 ** 20:
+            shards.append({})
+            size = 0
+        shards[-1][k] = v
+        size += v.nbytes
+    manifest = dict(meta=meta or {}, n_shards=len(shards),
+                    keys={k: i for i, sh in enumerate(shards) for k in sh})
+    for i, sh in enumerate(shards):
+        np.savez(os.path.join(path, f"shard_{i}.npz"), **sh)
+    with open(os.path.join(path, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+
+
+def restore(path: str) -> tuple[Any, dict]:
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    flat: dict[str, np.ndarray] = {}
+    for i in range(manifest["n_shards"]):
+        with np.load(os.path.join(path, f"shard_{i}.npz")) as z:
+            for k in z.files:
+                flat[k] = z[k]
+    return _unflatten(flat), manifest["meta"]

@@ -1,0 +1,84 @@
+"""AdamW optimizer in pure JAX (optax is not available offline).
+
+State and update are pytree-structured so the whole (params, opt_state)
+tree shards with the same PartitionSpecs as the parameters (moments inherit
+the parameter sharding — standard ZeRO-style placement under FSDP axes).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+
+
+def init_state(params: Any) -> dict:
+    zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+    return dict(mu=jax.tree.map(zeros, params),
+                nu=jax.tree.map(zeros, params),
+                step=jnp.zeros((), jnp.int32))
+
+
+def schedule(cfg: AdamWConfig, step: jnp.ndarray) -> jnp.ndarray:
+    """Linear warmup then cosine decay to min_lr_frac."""
+    warm = jnp.minimum(1.0, (step + 1) / max(cfg.warmup_steps, 1))
+    t = jnp.clip((step - cfg.warmup_steps)
+                 / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return cfg.lr * warm * cos
+
+
+def global_norm(tree: Any) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def apply_updates(cfg: AdamWConfig, params: Any, grads: Any,
+                  state: dict) -> tuple[Any, dict, dict]:
+    """One AdamW step with global-norm clipping. Returns
+    (new_params, new_state, metrics)."""
+    step = state["step"]
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+    lr = schedule(cfg, step)
+    b1t = 1 - cfg.b1 ** (step.astype(jnp.float32) + 1)
+    b2t = 1 - cfg.b2 ** (step.astype(jnp.float32) + 1)
+
+    def upd(p, g, mu, nu):
+        g = g.astype(jnp.float32) * scale
+        mu = cfg.b1 * mu + (1 - cfg.b1) * g
+        nu = cfg.b2 * nu + (1 - cfg.b2) * g * g
+        mhat = mu / b1t
+        nhat = nu / b2t
+        delta = mhat / (jnp.sqrt(nhat) + cfg.eps)
+        if p.ndim >= 2:  # decoupled weight decay on matrices only
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        newp = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        return newp, mu, nu
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_mu = jax.tree.leaves(state["mu"])
+    flat_nu = jax.tree.leaves(state["nu"])
+    out = [upd(p, g, m, n) for p, g, m, n in
+           zip(flat_p, flat_g, flat_mu, flat_nu)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_mu = tdef.unflatten([o[1] for o in out])
+    new_nu = tdef.unflatten([o[2] for o in out])
+    new_state = dict(mu=new_mu, nu=new_nu, step=step + 1)
+    return new_p, new_state, dict(grad_norm=gnorm, lr=lr)

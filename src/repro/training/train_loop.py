@@ -1,0 +1,55 @@
+"""Training step + loop (pjit-distributed, checkpointed)."""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from ..models import decoder
+from ..models.config import ModelConfig
+from . import checkpoint
+from .optimizer import AdamWConfig, apply_updates, init_state
+
+
+def make_train_step(cfg: ModelConfig,
+                    opt_cfg: AdamWConfig) -> Callable:
+    def train_step(params: Any, opt_state: dict, batch: dict):
+        loss, grads = jax.value_and_grad(
+            lambda p: decoder.train_loss(p, cfg, batch))(params)
+        params, opt_state, metrics = apply_updates(opt_cfg, params, grads,
+                                                   opt_state)
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+    return train_step
+
+
+def train(cfg: ModelConfig, opt_cfg: AdamWConfig, stream, n_steps: int,
+          rng=None, log_every: int = 10, ckpt_path: str | None = None,
+          ckpt_every: int = 0, params: Any = None) -> tuple[Any, list[dict]]:
+    """Single-host training loop (examples / smoke scale).
+
+    The distributed path is the same `make_train_step` jitted with
+    in/out_shardings — see launch/train.py.
+    """
+    rng = jax.random.PRNGKey(0) if rng is None else rng
+    if params is None:
+        params = decoder.init_params(rng, cfg)
+    opt_state = init_state(params)
+    step_fn = jax.jit(make_train_step(cfg, opt_cfg), donate_argnums=(0, 1))
+    history: list[dict] = []
+    t0 = time.perf_counter()
+    for step in range(n_steps):
+        batch = {k: jnp.asarray(v) for k, v in stream.batch(step).items()}
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        if step % log_every == 0 or step == n_steps - 1:
+            m = {k: float(v) for k, v in metrics.items()}
+            m["step"] = step
+            m["wall_s"] = time.perf_counter() - t0
+            history.append(m)
+        if ckpt_path and ckpt_every and (step + 1) % ckpt_every == 0:
+            checkpoint.save(ckpt_path, dict(params=params,
+                                            opt_state=opt_state),
+                            meta=dict(step=step + 1, arch=cfg.name))
+    return params, history

@@ -1,0 +1,13 @@
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def default_inst():
+    from repro.core import default_instance
+    return default_instance()
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

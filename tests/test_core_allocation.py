@@ -1,0 +1,116 @@
+"""Behaviour tests for the paper's allocation algorithms (MILP, GH, AGH,
+baselines) on `P_DM`."""
+import numpy as np
+import pytest
+
+from repro.core import (agh, default_instance, dvr, feasibility, gh, hf,
+                        is_feasible, lpr, objective, proc_delay,
+                        provisioning_cost, random_instance, solve_milp,
+                        stage2_lp)
+from repro.core.mechanisms import State, m1_select
+from repro.core.solution import Solution
+
+
+def test_gh_feasible_on_default(default_inst):
+    sol = gh(default_inst)
+    assert is_feasible(default_inst, sol, enforce_zeta=False)
+    assert sol.u.max() <= 1e-6          # full coverage in the base setting
+    assert sol.runtime_s < 1.0          # paper: GH < 1 s
+
+
+def test_agh_no_worse_than_gh(default_inst):
+    g = gh(default_inst)
+    a = agh(default_inst)
+    assert is_feasible(default_inst, a, enforce_zeta=False)
+    assert objective(default_inst, a) <= objective(default_inst, g) + 1e-6
+    assert a.runtime_s < 10.0           # paper: AGH < 3 s at (20,20,20)
+
+
+def test_agh_within_few_percent_of_milp(default_inst):
+    """Paper: AGH matches the exact optimum within a few percent on
+    instances the solver completes."""
+    a = agh(default_inst)
+    d = solve_milp(default_inst, time_limit=240)
+    if d.method == "DM(timeout)":
+        pytest.skip("MILP did not finish")
+    assert is_feasible(default_inst, d, enforce_zeta=False)
+    gap = (objective(default_inst, a) - objective(default_inst, d)) \
+        / max(objective(default_inst, d), 1e-9)
+    assert gap <= 0.05
+
+
+def test_m1_discards_oversized_models(default_inst):
+    """A 70B model (140 GB) must never fit a 24 GB tier at TP*PP=1."""
+    inst = default_inst
+    j70 = int(np.argmax(inst.B))
+    k4090 = inst.tier_names.index("RTX4090-FP16")
+    c = m1_select(inst, 0, j70, k4090)
+    if c is not None:
+        n, m = inst.configs[c]
+        assert inst.B_eff[j70, k4090] / (n * m) <= inst.C_gpu[k4090]
+
+
+def test_m1_respects_delay():
+    inst = default_instance()
+    inst.Delta[:] = 1e-6                # impossible SLO
+    inst.__post_init__()
+    for j in range(inst.J):
+        for k in range(inst.K):
+            assert m1_select(inst, 0, j, k) is None
+
+
+def test_gh_budget_respected(default_inst):
+    sol = gh(default_inst)
+    v = feasibility(default_inst, sol, enforce_zeta=False)
+    assert v["budget"] <= 1e-6
+
+
+def test_baselines_run_and_route(default_inst):
+    for fn in (lpr, dvr, hf):
+        sol = fn(default_inst)
+        # Baselines may violate coupled constraints (that is the point),
+        # but routing arithmetic must be consistent.
+        assert np.all(sol.x >= -1e-9)
+        total = sol.x.sum(axis=(1, 2)) + sol.u
+        assert np.allclose(total, 1.0, atol=1e-5)
+
+
+def test_stage2_lp_reroutes_under_perturbation(default_inst):
+    deploy = agh(default_inst)
+    rng = np.random.default_rng(7)
+    scen = default_inst.perturbed(rng, d_infl=0.10, e_infl=0.10)
+    sol, ok = stage2_lp(scen, deploy)
+    assert sol.x.sum() > 0
+    # deployment unchanged
+    assert np.array_equal(sol.y, deploy.y)
+    assert np.array_equal(sol.w, deploy.w)
+
+
+def test_runtime_scaling_medium():
+    """GH stays sub-second and AGH a few seconds on a (10,10,10) instance."""
+    inst = random_instance(10, 10, 10, seed=3)
+    g = gh(inst)
+    assert g.runtime_s < 2.0
+    a = agh(inst, R=3)
+    assert a.runtime_s < 30.0
+    assert objective(inst, a) <= objective(inst, g) + 1e-6
+
+
+def test_milp_beats_or_matches_heuristics_small():
+    inst = random_instance(4, 4, 5, seed=1)
+    d = solve_milp(inst, time_limit=120)
+    if d.method == "DM(timeout)":
+        pytest.skip("MILP timeout")
+    a = agh(inst)
+    assert objective(inst, d) <= objective(inst, a) + 1e-6
+
+
+def test_proc_delay_respects_slo(default_inst):
+    sol = agh(default_inst)
+    assert np.all(proc_delay(default_inst, sol) <= default_inst.Delta + 1e-9)
+
+
+def test_empty_solution_is_all_unmet(default_inst):
+    sol = Solution.empty(default_inst)
+    assert np.allclose(sol.u, 1.0)
+    assert provisioning_cost(default_inst, sol) == 0.0

@@ -1,0 +1,165 @@
+"""Distribution-layer tests: sharding rules, pipeline parallelism (in a
+subprocess with 8 host devices so the main test process keeps 1 device),
+dry-run smoke, HLO stats analyzer."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import numpy as np
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run_sub(code: str, devices: int = 8, timeout: float = 900.0):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    return subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                          capture_output=True, text=True, timeout=timeout,
+                          env=env)
+
+
+def test_main_process_sees_one_device():
+    """Assignment: smoke tests and benches must see 1 device, not 512."""
+    assert len(jax.devices()) == 1
+
+
+def test_param_specs_divisibility():
+    from jax.sharding import PartitionSpec as P
+
+    from repro.configs import get_config
+    from repro.launch.specs import params_specs
+    from repro.parallel import sharding as shd
+
+    # use a tiny host mesh: rules only read axis SIZES from the mesh
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    for arch in ("qwen2-72b", "internvl2-26b", "kimi-k2-1t-a32b"):
+        cfg = get_config(arch)
+        shapes = params_specs(cfg)
+        specs = shd.param_specs(shapes, mesh)
+        flat_shapes = jax.tree.leaves(shapes)
+        flat_specs = jax.tree.leaves(specs,
+                                     is_leaf=lambda x: isinstance(x, P))
+        for sds, spec in zip(flat_shapes, flat_specs):
+            for dim, axes in zip(sds.shape, tuple(spec)):
+                if axes is None:
+                    continue
+                assert dim % shd.mesh_axis_size(mesh, axes) == 0
+
+
+def test_pipeline_parallel_subprocess():
+    """GPipe shard_map pipeline == sequential reference, on 4 stages."""
+    code = """
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.sharding import PartitionSpec as P
+    from repro.parallel.pipeline import pipelined_forward, split_stages, pipeline_utilization
+
+    n_stages, n_micro, mb, d = 4, 8, 2, 16
+    mesh = jax.make_mesh((n_stages,), ("stage",))
+    rng = np.random.default_rng(0)
+    L = 8
+    W = jnp.asarray(rng.normal(size=(L, d, d)) * (d ** -0.5), jnp.float32)
+
+    def stage_fn(sp, x):
+        def body(h, w):
+            return jnp.tanh(h @ w), None
+        h, _ = jax.lax.scan(body, x, sp)
+        return h
+
+    xs = jnp.asarray(rng.normal(size=(n_micro, mb, d)), jnp.float32)
+    fn = pipelined_forward(stage_fn, mesh, n_stages, n_micro)
+    stacked = split_stages(W, n_stages)
+    with mesh:
+        out = fn(stacked, xs)
+    # sequential reference
+    ref = xs
+    def body(h, w):
+        return jnp.tanh(h @ w), None
+    ref_out = []
+    for m in range(n_micro):
+        h, _ = jax.lax.scan(body, xs[m], W)
+        ref_out.append(h)
+    ref = jnp.stack(ref_out)
+    err = float(jnp.abs(out - ref).max())
+    assert err < 1e-5, err
+    assert abs(pipeline_utilization(9, 4) - 0.75) < 1e-9
+    print("PIPELINE_OK", err)
+    """
+    r = _run_sub(code, devices=4)
+    assert "PIPELINE_OK" in r.stdout, r.stderr[-2000:]
+
+
+def test_dryrun_smoke_subprocess():
+    """Full dry-run path (lower+compile+analysis) on a reduced mesh/model
+    in a subprocess — exercises the same code as the 512-device run."""
+    code = """
+    import os
+    import jax, jax.numpy as jnp
+    from repro.configs import get_config
+    from repro.models import decoder
+    from repro.parallel import sharding as shd
+    from repro.launch.specs import params_specs
+    from repro.analysis.hlo_stats import analyze
+    import dataclasses
+
+    cfg = dataclasses.replace(get_config("qwen2-0.5b"), n_layers=4)
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    p_shapes = params_specs(cfg)
+    p_shard = shd.to_shardings(shd.param_specs(p_shapes, mesh), mesh)
+    toks = jax.ShapeDtypeStruct((8, 256), jnp.int32)
+    tok_shard = jax.sharding.NamedSharding(mesh, shd.batch_spec(mesh, toks.shape))
+    with mesh:
+        f = jax.jit(lambda p, t: decoder.train_loss(p, cfg, dict(tokens=t, targets=t)),
+                    in_shardings=(p_shard, tok_shard))
+        compiled = f.lower(p_shapes, toks).compile()
+    s = analyze(compiled.as_text())
+    assert s.flops > 1e9, s.flops
+    assert s.collective_bytes > 0
+    print("DRYRUN_OK", s.flops, s.collective_bytes)
+    """
+    r = _run_sub(code, devices=8)
+    assert "DRYRUN_OK" in r.stdout, r.stderr[-2000:]
+
+
+def test_hlo_stats_trip_count_weighting():
+    """A scan of N matmuls must report ~N x the flops of one matmul."""
+    import jax.numpy as jnp
+
+    from repro.analysis.hlo_stats import analyze
+
+    d, N = 64, 16
+
+    def f(w, x):
+        def body(h, _):
+            return h @ w, None
+        h, _ = jax.lax.scan(body, x, None, length=N)
+        return h
+
+    w = jax.ShapeDtypeStruct((d, d), jnp.float32)
+    x = jax.ShapeDtypeStruct((d, d), jnp.float32)
+    compiled = jax.jit(f).lower(w, x).compile()
+    s = analyze(compiled.as_text())
+    expect = 2.0 * d * d * d * N
+    assert 0.5 * expect <= s.flops <= 1.5 * expect, (s.flops, expect)
+
+
+def test_dryrun_results_artifact_sane():
+    """The committed sweep artifact must cover every (arch, shape) pair
+    on both meshes with ok/skipped status."""
+    path = os.path.join(REPO, "experiments", "dryrun_results.json")
+    if not os.path.exists(path):
+        pytest.skip("sweep not yet run")
+    rows = json.load(open(path))
+    seen = {(r["arch"], r["shape"], r["multi_pod"]): r["status"] for r in rows}
+    from repro.configs import ARCH_IDS
+    from repro.launch.specs import SHAPES
+    missing = [(a, s, mp) for a in ARCH_IDS for s in SHAPES
+               for mp in (False, True) if (a, s, mp) not in seen]
+    # allow missing only while the background sweep is still filling in
+    if missing:
+        pytest.skip(f"sweep incomplete: {len(missing)} combos outstanding")
+    assert all(v in ("ok", "skipped") for v in seen.values()), seen

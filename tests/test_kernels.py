@@ -1,0 +1,156 @@
+"""Per-kernel validation: Pallas (interpret=True) vs pure-jnp oracle,
+swept over shapes and dtypes (assignment requirement)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.decode_attention.ops import decode_attention
+from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.rwkv6_wkv.ops import rwkv6_wkv
+from repro.kernels.rwkv6_wkv.ref import rwkv6_wkv_ref
+from repro.kernels.ssm_scan.ops import ssm_scan
+from repro.kernels.ssm_scan.ref import ssm_scan_ref
+
+TOLS = {jnp.float32: 2e-5, jnp.bfloat16: 5e-2}
+
+
+def _tol(dtype):
+    return TOLS[jnp.bfloat16] if dtype == jnp.bfloat16 else TOLS[jnp.float32]
+
+
+@pytest.mark.parametrize("B,H,KV,T,hd", [
+    (1, 2, 1, 128, 64), (2, 4, 2, 256, 64), (1, 8, 8, 256, 128),
+    (2, 2, 2, 384, 32),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("window", [0, 96])
+def test_flash_attention_sweep(B, H, KV, T, hd, dtype, window):
+    rng = np.random.default_rng(hash((B, H, T, window)) % 2**31)
+    q = jnp.asarray(rng.normal(size=(B, H, T, hd)), dtype)
+    k = jnp.asarray(rng.normal(size=(B, KV, T, hd)), dtype)
+    v = jnp.asarray(rng.normal(size=(B, KV, T, hd)), dtype)
+    out = flash_attention(q, k, v, window=window, block_q=128, block_k=128)
+    ref = attention_ref(q, k, v, jnp.arange(T), jnp.arange(T), window=window)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=_tol(dtype), rtol=_tol(dtype))
+
+
+@pytest.mark.parametrize("B,KV,G,S,hd", [
+    (1, 2, 4, 512, 64), (2, 1, 8, 1024, 128), (2, 4, 1, 512, 64),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention_sweep(B, KV, G, S, hd, dtype):
+    rng = np.random.default_rng(hash((B, KV, G, S)) % 2**31)
+    q = jnp.asarray(rng.normal(size=(B, KV, G, hd)), dtype)
+    k = jnp.asarray(rng.normal(size=(B, KV, S, hd)), dtype)
+    v = jnp.asarray(rng.normal(size=(B, KV, S, hd)), dtype)
+    pos = jnp.int32(S - S // 3)
+    out = decode_attention(q, k, v, pos=pos, block_k=256)
+    ref = decode_attention_ref(q, k, v, jnp.arange(S), pos)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=_tol(dtype), rtol=_tol(dtype))
+
+
+def test_decode_attention_ring_positions():
+    """Ring-buffer caches pass non-monotonic absolute positions."""
+    rng = np.random.default_rng(3)
+    B, KV, G, S, hd = 1, 2, 2, 256, 64
+    q = jnp.asarray(rng.normal(size=(B, KV, G, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, KV, S, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, KV, S, hd)), jnp.float32)
+    pos = jnp.int32(300)
+    last = 300
+    idx = jnp.arange(S)
+    k_pos = last - ((last - idx) % S)
+    out = decode_attention(q, k, v, k_pos=k_pos, pos=pos, block_k=128)
+    ref = decode_attention_ref(q, k, v, k_pos, pos)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+@pytest.mark.parametrize("B,T,nh,hp,N,chunk", [
+    (1, 128, 2, 32, 16, 64), (2, 256, 3, 64, 64, 128), (1, 64, 1, 32, 32, 64),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssm_scan_sweep(B, T, nh, hp, N, chunk, dtype):
+    rng = np.random.default_rng(hash((B, T, nh)) % 2**31)
+    x = jnp.asarray(rng.normal(size=(B, T, nh, hp)), dtype)
+    Bm = jnp.asarray(rng.normal(size=(B, T, N)) * 0.5, dtype)
+    Cm = jnp.asarray(rng.normal(size=(B, T, N)) * 0.5, dtype)
+    dt = jnp.asarray(rng.uniform(0.001, 0.1, size=(B, T, nh)), jnp.float32)
+    A = -jnp.asarray(rng.uniform(0.5, 2.0, size=(nh,)), jnp.float32)
+    D = jnp.asarray(rng.normal(size=(nh,)), jnp.float32)
+    y = ssm_scan(x, Bm, Cm, dt, A, D, chunk=chunk)
+    yr = ssm_scan_ref(x, Bm, Cm, dt, A, D)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(yr, np.float32),
+                               atol=5 * _tol(dtype), rtol=5 * _tol(dtype))
+
+
+@pytest.mark.parametrize("B,T,H,hd,chunk", [
+    (1, 64, 1, 32, 64), (2, 128, 2, 64, 64), (1, 192, 2, 32, 64),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32])
+def test_rwkv6_wkv_sweep(B, T, H, hd, chunk, dtype):
+    rng = np.random.default_rng(hash((B, T, H)) % 2**31)
+    r = jnp.asarray(rng.normal(size=(B, T, H, hd)) * 0.5, dtype)
+    k = jnp.asarray(rng.normal(size=(B, T, H, hd)) * 0.5, dtype)
+    v = jnp.asarray(rng.normal(size=(B, T, H, hd)) * 0.5, dtype)
+    lw = -jnp.exp(jnp.asarray(rng.normal(size=(B, T, H, hd)) * 0.5 - 1.5,
+                              jnp.float32))
+    u = jnp.asarray(rng.normal(size=(H, hd)) * 0.5, jnp.float32)
+    y = rwkv6_wkv(r, k, v, lw, u, chunk=chunk)
+    yr = rwkv6_wkv_ref(r, k, v, lw, u)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(yr, np.float32),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_model_layer_matches_kernel_oracle_mamba():
+    """models/mamba2.py chunked path == kernel oracle (same math)."""
+    import dataclasses
+
+    from repro.configs import get_config
+    from repro.models.mamba2 import mamba2_apply, mamba2_params
+
+    cfg = get_config("zamba2-7b").smoke()
+    rng = jax.random.PRNGKey(0)
+    p = mamba2_params(rng, cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 256, cfg.d_model),
+                          jnp.float32)
+    out_chunked, _ = mamba2_apply(p, cfg, x, None)
+    # step-by-step decode over the same tokens must agree
+    from repro.models.mamba2 import mamba2_cache_init
+    cache = mamba2_cache_init(cfg, 2)
+    outs = []
+    for t in range(x.shape[1]):
+        o, cache = mamba2_apply(p, cfg, x[:, t:t + 1], cache)
+        outs.append(o)
+    out_step = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(out_chunked), np.asarray(out_step),
+                               atol=2e-3, rtol=2e-3)
+
+
+def test_model_layer_matches_stepwise_rwkv():
+    from repro.configs import get_config
+    from repro.models.rwkv6 import (rwkv6_apply, rwkv6_cache_init,
+                                    rwkv6_params)
+
+    cfg = get_config("rwkv6-7b").smoke()
+    rng = jax.random.PRNGKey(0)
+    p = rwkv6_params(rng, cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 128, cfg.d_model),
+                          jnp.float32)
+    out_chunked, _ = rwkv6_apply(p, cfg, x, None)
+    cache = rwkv6_cache_init(cfg, 2)
+    outs = []
+    for t in range(x.shape[1]):
+        o, cache = rwkv6_apply(p, cfg, x[:, t:t + 1], cache)
+        outs.append(o)
+    out_step = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(out_chunked), np.asarray(out_step),
+                               atol=2e-3, rtol=2e-3)

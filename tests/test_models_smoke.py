@@ -1,0 +1,141 @@
+"""Per-architecture smoke tests (assignment requirement): instantiate the
+REDUCED variant of each family (2 layers, d_model <= 512, <= 4 experts) and
+run one forward/train step on CPU asserting output shapes + no NaNs. Also
+checks prefill+decode consistency against the full forward pass."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models import decoder
+
+RNG = jax.random.PRNGKey(0)
+
+
+def _batch(cfg, B=2, S=16):
+    if cfg.n_codebooks:
+        toks = jax.random.randint(RNG, (B, S, cfg.n_codebooks), 0,
+                                  cfg.vocab_size)
+    else:
+        toks = jax.random.randint(RNG, (B, S), 0, cfg.vocab_size)
+    batch = dict(tokens=toks, targets=toks)
+    if cfg.n_prefix_embeds:
+        batch["prefix"] = jax.random.normal(
+            RNG, (B, cfg.n_prefix_embeds, cfg.d_model), jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_train_step(arch):
+    cfg = get_config(arch).smoke()
+    assert cfg.n_layers == 2 and cfg.d_model <= 512
+    assert cfg.n_experts <= 4
+    params = decoder.init_params(RNG, cfg)
+    batch = _batch(cfg)
+
+    from repro.training.optimizer import AdamWConfig, init_state
+    from repro.training.train_loop import make_train_step
+    step = make_train_step(cfg, AdamWConfig(lr=1e-3))
+    opt = init_state(params)
+    params2, opt2, metrics = jax.jit(step)(params, opt, batch)
+    assert jnp.isfinite(metrics["loss"])
+    assert jnp.isfinite(metrics["grad_norm"])
+    # params actually changed
+    diffs = jax.tree.map(lambda a, b: float(jnp.abs(a.astype(jnp.float32)
+                                                    - b.astype(jnp.float32)).max()),
+                         params, params2)
+    assert max(jax.tree.leaves(diffs)) > 0
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_prefill_decode_shapes(arch):
+    cfg = get_config(arch).smoke()
+    params = decoder.init_params(RNG, cfg)
+    B, S = 2, 16
+    batch = _batch(cfg, B, S)
+    P = cfg.n_prefix_embeds
+    logits, cache = decoder.prefill(params, cfg, batch["tokens"],
+                                    batch.get("prefix"), max_len=S + P + 8)
+    nq = cfg.n_codebooks
+    want = (B, 1, nq, cfg.vocab_size) if nq else (B, 1, cfg.vocab_size)
+    assert logits.shape == want
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    tok = batch["tokens"][:, :1]
+    lg, cache = decoder.decode_step(params, cfg, cache, tok,
+                                    jnp.int32(S + P))
+    assert lg.shape == want
+    assert bool(jnp.all(jnp.isfinite(lg)))
+
+
+@pytest.mark.parametrize("arch", ["qwen2-0.5b", "rwkv6-7b", "zamba2-7b",
+                                  "kimi-k2-1t-a32b"])
+def test_prefill_decode_matches_full_forward(arch):
+    """Decoding token-by-token after a prefill must reproduce the logits of
+    one big forward pass (the serving-correctness invariant).
+
+    MoE note: capacity-based dispatch drops depend on the co-batched tokens,
+    so the invariant only holds when capacity is large enough that nothing
+    drops — we raise capacity_factor accordingly (documented behaviour of
+    capacity-MoE serving, not a bug)."""
+    import dataclasses
+    cfg = get_config(arch).smoke()
+    if cfg.n_experts:
+        cfg = dataclasses.replace(cfg, capacity_factor=float(cfg.n_experts))
+    params = decoder.init_params(RNG, cfg)
+    B, S = 1, 12
+    toks = jax.random.randint(jax.random.PRNGKey(5), (B, S), 0,
+                              cfg.vocab_size)
+    # full prefill over S tokens -> last logits
+    full_logits, _ = decoder.prefill(params, cfg, toks, max_len=S + 2)
+    # prefill first S-3, then decode 3 steps
+    cut = S - 3
+    _, cache = decoder.prefill(params, cfg, toks[:, :cut], max_len=S + 2)
+    lg = None
+    for t in range(cut, S):
+        lg, cache = decoder.decode_step(params, cfg, cache, toks[:, t:t + 1],
+                                        jnp.int32(t))
+    np.testing.assert_allclose(np.asarray(lg[:, -1], np.float32),
+                               np.asarray(full_logits[:, -1], np.float32),
+                               atol=2e-2, rtol=2e-2)
+
+
+def test_sliding_window_cache_ring():
+    """With window < seq, ring-buffer decode matches a fresh windowed
+    forward pass."""
+    import dataclasses
+    cfg = get_config("qwen2-0.5b").smoke()
+    cfg = dataclasses.replace(cfg, sliding_window=8)
+    params = decoder.init_params(RNG, cfg)
+    B, S = 1, 20
+    toks = jax.random.randint(jax.random.PRNGKey(2), (B, S), 0,
+                              cfg.vocab_size)
+    _, cache = decoder.prefill(params, cfg, toks[:, :-1], max_len=S)
+    lg, _ = decoder.decode_step(params, cfg, cache, toks[:, -1:],
+                                jnp.int32(S - 1))
+    full, _ = decoder.prefill(params, cfg, toks, max_len=S)
+    np.testing.assert_allclose(np.asarray(lg[:, -1], np.float32),
+                               np.asarray(full[:, -1], np.float32),
+                               atol=2e-2, rtol=2e-2)
+
+
+def test_moe_capacity_active_flops_shape():
+    """MoE block output is finite and the capacity is bounded by
+    N * top_k * capacity_factor / E."""
+    cfg = get_config("kimi-k2-1t-a32b").smoke()
+    from repro.models.moe import moe_apply, moe_params
+    p = moe_params(RNG, cfg)
+    x = jax.random.normal(RNG, (2, 32, cfg.d_model), jnp.float32)
+    y = moe_apply(p, cfg, x)
+    assert y.shape == x.shape
+    assert bool(jnp.all(jnp.isfinite(y)))
+
+
+def test_param_count_sane():
+    cfg = get_config("kimi-k2-1t-a32b")
+    total = cfg.param_count()
+    active = cfg.active_param_count()
+    assert 0.9e12 < total < 1.2e12          # ~1T (paper-table entry)
+    assert 25e9 < active < 40e9             # ~32B active
+    dense = get_config("qwen2-72b")
+    assert 65e9 < dense.param_count() < 85e9

@@ -1,0 +1,62 @@
+"""Beyond-paper optimization variants (§Perf): numerical correctness on
+CPU (the dry-run measures their distributed effect)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import decoder
+from repro.models.moe import moe_apply, moe_params
+
+RNG = jax.random.PRNGKey(0)
+
+
+def test_w8a8_moe_close_to_bf16():
+    cfg = get_config("kimi-k2-1t-a32b").smoke()
+    cfg32 = dataclasses.replace(cfg, dtype="float32")
+    p = moe_params(RNG, cfg32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model),
+                          jnp.float32) * 0.5
+    ref = moe_apply(p, cfg32, x)
+    cfg_q = dataclasses.replace(cfg32, moe_w8a8=True)
+    pq = moe_params(RNG, cfg_q)           # same rng -> same pre-quant weights
+    out = moe_apply(pq, cfg_q, x)
+    # INT8 quantization error should be small but non-zero (mu > 1 in the
+    # paper's terms).
+    err = float(jnp.abs(out - ref).max())
+    rel = err / float(jnp.abs(ref).max())
+    assert rel < 0.15, rel
+    assert err > 0.0
+
+
+def test_seqshard_flag_is_noop_on_single_device():
+    """With no mesh, the constraint cascade falls through and the
+    unchunked attention must equal the streaming-chunked baseline."""
+    cfg = get_config("qwen2-1.5b").smoke()
+    cfg_on = dataclasses.replace(cfg, seq_shard_attention=True)
+    params = decoder.init_params(RNG, cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(2), (2, 32), 0,
+                              cfg.vocab_size)
+    lg0, _ = decoder.prefill(params, cfg, toks, max_len=40)
+    lg1, _ = decoder.prefill(params, cfg_on, toks, max_len=40)
+    np.testing.assert_allclose(np.asarray(lg0, np.float32),
+                               np.asarray(lg1, np.float32),
+                               atol=2e-3, rtol=2e-3)
+
+
+def test_unchunked_equals_chunked_attention():
+    from repro.models.layers import attention, attention_unchunked
+    rng = np.random.default_rng(0)
+    B, T, H, KV, hd = 2, 384, 4, 2, 64
+    q = jnp.asarray(rng.normal(size=(B, T, H, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, T, KV, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, T, KV, hd)), jnp.float32)
+    pos = jnp.arange(T)
+    a = attention(q, k, v, pos, pos, block_q=128, block_k=128)
+    b = attention_unchunked(q, k, v, pos, pos)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5)
+    aw = attention(q, k, v, pos, pos, window=100, block_q=128, block_k=128)
+    bw = attention_unchunked(q, k, v, pos, pos, window=100)
+    np.testing.assert_allclose(np.asarray(aw), np.asarray(bw), atol=2e-5)

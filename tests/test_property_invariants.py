@@ -1,0 +1,95 @@
+"""Property-based tests (hypothesis) on the allocator's invariants:
+for ANY randomly generated instance, GH/AGH output must satisfy the
+coupled constraint system they claim to preserve."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (agh, feasibility, gh, is_feasible, objective,
+                        random_instance)
+from repro.core.mechanisms import State, commit, m1_select, max_commit
+
+
+@st.composite
+def instances(draw):
+    I = draw(st.integers(2, 6))
+    J = draw(st.integers(2, 5))
+    K = draw(st.integers(2, 6))
+    seed = draw(st.integers(0, 10_000))
+    budget = draw(st.floats(30.0, 400.0))
+    return random_instance(I, J, K, seed=seed, budget=budget)
+
+
+@settings(max_examples=25, deadline=None)
+@given(instances())
+def test_gh_always_feasible(inst):
+    """THE paper claim: constraint-aware construction never emits an
+    infeasible allocation (unmet demand is allowed; constraint violation
+    is not)."""
+    sol = gh(inst)
+    v = feasibility(inst, sol, enforce_zeta=False)
+    for name, val in v.items():
+        assert val <= 1e-4, (name, val, inst.I, inst.J, inst.K)
+
+
+@settings(max_examples=10, deadline=None)
+@given(instances())
+def test_agh_feasible_and_no_worse(inst):
+    g = gh(inst)
+    a = agh(inst, R=2, patience=3)
+    assert is_feasible(inst, a, enforce_zeta=False)
+    assert objective(inst, a) <= objective(inst, g) + 1e-6
+
+
+@settings(max_examples=25, deadline=None)
+@given(instances(), st.integers(0, 5))
+def test_m1_selection_is_feasible_and_cheapest(inst, i_raw):
+    i = i_raw % inst.I
+    for j in range(inst.J):
+        for k in range(inst.K):
+            c = m1_select(inst, i, j, k)
+            if c is None:
+                continue
+            n, m = inst.configs[c]
+            assert inst.B_eff[j, k] / (n * m) <= inst.C_gpu[k] + 1e-9
+            assert inst.D_cfg[i, j, k, c] <= inst.Delta[i] + 1e-9
+            # minimality: no strictly smaller nm is feasible
+            for c2, (n2, m2) in enumerate(inst.configs):
+                if n2 * m2 < n * m:
+                    fits = (inst.B_eff[j, k] / (n2 * m2) <= inst.C_gpu[k]
+                            and inst.D_cfg[i, j, k, c2] <= inst.Delta[i])
+                    assert not fits
+
+
+@settings(max_examples=15, deadline=None)
+@given(instances())
+def test_max_commit_never_overcommits(inst):
+    """Committing exactly max_commit must keep the running state feasible."""
+    st_ = State.fresh(inst)
+    order = np.argsort(-inst.lam)
+    for i in order[: min(3, inst.I)]:
+        i = int(i)
+        for j in range(inst.J):
+            for k in range(inst.K):
+                if st_.q[j, k] > 0.5:
+                    # active pair: reuse its config (GH's Phase-2 rule)
+                    c = int(st_.cfg[j, k])
+                    if inst.D_cfg[i, j, k, c] > inst.Delta[i]:
+                        continue
+                else:
+                    c = m1_select(inst, i, j, k)
+                    if c is None:
+                        continue
+                frac = min(st_.r_rem[i], max_commit(st_, i, j, k, c))
+                if frac <= 1e-9:
+                    continue
+                commit(st_, i, j, k, c, frac)
+                break
+            else:
+                continue
+            break
+    from repro.core.gh import greedy_heuristic
+    # state-level invariants
+    assert st_.spend <= inst.delta + 1e-6
+    assert np.all(st_.r_rem >= -1e-9)
+    assert np.all(st_.E_used <= inst.eps + 1e-9)
+    assert np.all(st_.D_used <= inst.Delta + 1e-9)
