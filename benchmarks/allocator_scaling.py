@@ -1,0 +1,68 @@
+"""Allocator scaling: before/after rows for the vectorized engine.
+
+Times the frozen scalar seed path (`_scalar_ref`, the "before") against the
+vectorized engine ("after") on random instances growing to (30,30,20) —
+beyond the paper's largest Table-6 size — and emits one
+``name,us_per_call`` row per (size, method, path) so perf regressions show
+up directly in CI logs.
+
+The scalar AGH is capped at sizes where it finishes in a few seconds; for
+larger sizes only its GH "before" row is emitted (the AGH-before cost is
+the reason this engine exists).
+"""
+from __future__ import annotations
+
+from repro.core import agh, gh, objective, random_instance
+from repro.core._scalar_ref import agh_scalar, gh_scalar
+
+from .common import Timer, emit
+
+SIZES = [(6, 6, 10), (10, 10, 10), (15, 15, 10), (20, 20, 20), (30, 30, 20)]
+SCALAR_AGH_MAX = 10 * 10 * 10   # scalar AGH above this takes minutes
+
+
+def run(sizes=SIZES, scalar_agh_max: int = SCALAR_AGH_MAX) -> list[dict]:
+    rows = []
+    for (I, J, K) in sizes:
+        inst = random_instance(I, J, K, seed=42)
+        size = f"({I},{J},{K})"
+        row = dict(size=size)
+
+        with Timer() as t:
+            g_ref, _ = gh_scalar(inst)
+        row["GH_before_us"] = t.us
+        emit(f"allocator_scaling.{size}.GH.before", t.us,
+             f"obj={objective(inst, g_ref):.2f}")
+
+        with Timer() as t:
+            g_vec = gh(inst)
+        row["GH_after_us"] = t.us
+        emit(f"allocator_scaling.{size}.GH.after", t.us,
+             f"obj={objective(inst, g_vec):.2f};"
+             f"speedup={row['GH_before_us'] / max(t.us, 1e-9):.1f}x")
+
+        if I * J * K <= scalar_agh_max:
+            with Timer() as t:
+                a_ref = agh_scalar(inst)
+            row["AGH_before_us"] = t.us
+            emit(f"allocator_scaling.{size}.AGH.before", t.us,
+                 f"obj={objective(inst, a_ref):.2f}")
+
+        with Timer() as t:
+            a_vec = agh(inst)
+        row["AGH_after_us"] = t.us
+        derived = f"obj={objective(inst, a_vec):.2f}"
+        if "AGH_before_us" in row:
+            derived += f";speedup={row['AGH_before_us'] / max(t.us, 1e-9):.1f}x"
+        emit(f"allocator_scaling.{size}.AGH.after", t.us, derived)
+        rows.append(row)
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scalar-agh-max", type=int, default=SCALAR_AGH_MAX,
+                    help="largest I*J*K for which the scalar AGH is timed")
+    args = ap.parse_args()
+    run(scalar_agh_max=args.scalar_agh_max)

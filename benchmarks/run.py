@@ -27,8 +27,8 @@ def main(argv=None) -> int:
     trials = 1 if args.quick else (30 if args.full else 3)
     windows = 48 if args.quick else (288 if args.full else 96)
 
-    from . import (extensions, figs, kernels_bench, table2, table3, table4,
-                   table5, table6)
+    from . import (allocator_scaling, extensions, figs, kernels_bench, table2,
+                   table3, table4, table5, table6)
 
     sections = {
         "table2": lambda: table2.run(S=S, include_dm=False),
@@ -43,7 +43,11 @@ def main(argv=None) -> int:
         "table6": lambda: table6.run(
             dm_limit=120.0 if not args.full else 600.0,
             dm_max_size=1000 if not args.full else 10**9,
-            sizes=table6.SIZES[:3] if args.quick else table6.SIZES),
+            sizes=(table6.SIZES[:3] if args.quick
+                   else (table6.SIZES_EXT if args.full else table6.SIZES))),
+        "allocator_scaling": lambda: allocator_scaling.run(
+            sizes=(allocator_scaling.SIZES[:2] if args.quick
+                   else allocator_scaling.SIZES)),
         "figs": lambda: figs.run(S=max(20, S // 4)),
         "extensions": extensions.run,
         "kernels": kernels_bench.run,

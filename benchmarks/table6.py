@@ -1,24 +1,36 @@
 """Table 6: runtime scaling with problem size (I, J, K).
 
 Paper: DM exceeds 600 s at (15,15,10); GH < 1 s and AGH < 3 s everywhere
-(>= 260x speedup at (20,20,20))."""
+(>= 260x speedup at (20,20,20)).
+
+The heuristic columns run on the vectorized allocation engine; with
+``include_before`` each row also times the frozen scalar seed path
+(`_scalar_ref.gh_scalar`) so the before/after speedup is visible next to
+the paper's DM baseline.  `SIZES_EXT` pushes one size past the paper's
+largest instance."""
 from __future__ import annotations
 
 from repro.core import agh, gh, objective, random_instance, solve_milp
+from repro.core._scalar_ref import gh_scalar
 
 from .common import Timer, emit
 
 SIZES = [(4, 4, 5), (6, 6, 10), (10, 10, 10), (15, 15, 10), (20, 20, 20)]
+SIZES_EXT = SIZES + [(30, 30, 20)]
 
 
 def run(dm_limit: float = 600.0, dm_max_size: int = 1000,
-        sizes=SIZES) -> list[dict]:
+        sizes=SIZES, include_before: bool = True) -> list[dict]:
     rows = []
     for (I, J, K) in sizes:
         inst = random_instance(I, J, K, seed=42)
         row = dict(size=f"({I},{J},{K})")
         g = gh(inst)
         row["GH_s"] = round(g.runtime_s, 3)
+        if include_before:
+            with Timer() as t:
+                gh_scalar(inst)
+            row["GH_before_s"] = round(t.dt, 3)
         a = agh(inst)
         row["AGH_s"] = round(a.runtime_s, 3)
         row["AGH_obj"] = round(objective(inst, a), 1)
@@ -44,5 +56,8 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--dm-limit", type=float, default=600.0)
     ap.add_argument("--dm-max-size", type=int, default=10**9)
+    ap.add_argument("--ext", action="store_true",
+                    help="include the beyond-paper (30,30,20) size")
     args = ap.parse_args()
-    run(dm_limit=args.dm_limit, dm_max_size=args.dm_max_size)
+    run(dm_limit=args.dm_limit, dm_max_size=args.dm_max_size,
+        sizes=SIZES_EXT if args.ext else SIZES)

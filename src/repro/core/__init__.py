@@ -7,7 +7,9 @@ from .baselines import dvr, hf, lpr
 from .evaluate import EvalResult, evaluate
 from .gh import gh, greedy_heuristic
 from .instance import Instance, default_instance, random_instance
-from .mechanisms import State, m1_select, m3_upgrade
+from .mechanisms import (State, m1_select, m3_upgrade, max_commit,
+                         max_commit_batch, rank_keys_all, solution_from_state,
+                         state_objective)
 from .milp import solve_milp
 from .queueing import (queueing_delay, slo_attainment_with_queueing,
                        utilization, with_queueing_margin)
@@ -19,7 +21,9 @@ from .stage2 import stage2_cost, stage2_lp
 __all__ = [
     "agh", "dvr", "hf", "lpr", "EvalResult", "evaluate", "gh",
     "greedy_heuristic", "Instance", "default_instance", "random_instance",
-    "State", "m1_select", "m3_upgrade", "solve_milp", "RollingResult",
+    "State", "m1_select", "m3_upgrade", "max_commit", "max_commit_batch",
+    "rank_keys_all", "solution_from_state", "state_objective",
+    "solve_milp", "RollingResult",
     "rolling", "volatility_study", "Solution", "cost_terms", "feasibility",
     "is_feasible", "objective", "proc_delay", "provisioning_cost",
     "stage2_cost", "stage2_lp",

@@ -1,0 +1,483 @@
+"""Scalar reference implementations of GH / AGH (pre-vectorization).
+
+This module freezes the original pure-Python triple-loop allocation path —
+per-candidate `m1_select` config scans, per-candidate `rank_key` evaluation,
+from-scratch `State` rebuilds for every trial move, and full
+`objective()`/`is_feasible()` recomputation per local-search step.
+
+It exists ONLY as the behavioral oracle for the vectorized engine in
+`mechanisms.py` / `gh.py` / `agh.py`: `tests/test_vectorized_equivalence.py`
+asserts that the fast path returns the same solutions (same active pairs and
+configs, objectives within 1e-9) as this reference on default, random, and
+stressed instances.  It is intentionally slow (the (20,20,20) AGH takes ~8 s
+here vs < 1 s on the vectorized path) and must not be used by any production
+caller.
+
+Every function is a verbatim copy of the seed implementation; only the
+sharing with the live module differs — the reference recomputes each
+aggregate (KV tokens, compute load, per-type storage, spend) from the raw
+x/y/q/z arrays instead of reading the incremental `State` fields.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .instance import Instance, KB_PER_GB
+from .mechanisms import State
+from .solution import Solution, is_feasible, objective
+
+# ---------------------------------------------------------------------------
+# Mechanisms (scalar)
+# ---------------------------------------------------------------------------
+
+
+def m1_select_ref(inst: Instance, i: int, j: int, k: int,
+                  ablation: frozenset = frozenset()) -> int | None:
+    """Cheapest feasible config index for (i,j,k) per eq. (9), else None."""
+    if "no_m1" in ablation:
+        return int(np.argmin(inst.nm))
+    best, best_nm, best_d = None, np.inf, np.inf
+    for c, (n, m) in enumerate(inst.configs):
+        nm = n * m
+        if inst.B_eff[j, k] / nm > inst.C_gpu[k]:
+            continue
+        d = inst.D_cfg[i, j, k, c]
+        if d > inst.Delta[i]:
+            continue
+        if nm < best_nm or (nm == best_nm and d < best_d):
+            best, best_nm, best_d = c, nm, d
+    return best
+
+
+def m3_upgrade_ref(st: State, i: int, j: int, k: int) -> int | None:
+    inst = st.inst
+    y_cur = st.y[j, k]
+    best, best_nm = None, np.inf
+    for c, (n, m) in enumerate(inst.configs):
+        nm = n * m
+        if nm <= y_cur or nm >= best_nm:
+            continue
+        if inst.B_eff[j, k] / nm > inst.C_gpu[k]:
+            continue
+        if inst.D_cfg[i, j, k, c] > inst.Delta[i]:
+            continue
+        inc_cost = inst.Delta_T * inst.p_c[k] * (nm - y_cur)
+        if st.spend + inc_cost > inst.delta:
+            continue
+        if st.cfg[j, k] >= 0 and not _retime_ok_ref(st, j, k, c):
+            continue
+        best, best_nm = c, nm
+    return best
+
+
+def _retime_ok_ref(st: State, j: int, k: int, c_new: int) -> bool:
+    inst = st.inst
+    c_old = st.cfg[j, k]
+    for i2 in range(inst.I):
+        if st.x[i2, j, k] <= 1e-12:
+            continue
+        d_new = (st.D_used[i2]
+                 + (inst.D_cfg[i2, j, k, c_new] - inst.D_cfg[i2, j, k, c_old])
+                 * st.x[i2, j, k])
+        if d_new > inst.Delta[i2] + 1e-9:
+            return False
+    return True
+
+
+def effective_coverage_ref(st: State, i: int, j: int, k: int, c: int) -> float:
+    inst = st.inst
+    e = inst.e_bar[i, j, k]
+    d = inst.D_cfg[i, j, k, c]
+    err_cap = (inst.eps[i] - st.E_used[i]) / max(e, 1e-12)
+    del_cap = (inst.Delta[i] - st.D_used[i]) / max(d, 1e-12)
+    if "no_m3" in st.ablation:
+        del_cap = st.r_rem[i]
+    return float(min(st.r_rem[i], err_cap, del_cap))
+
+
+def marginal_cost_ref(st: State, i: int, j: int, k: int, c: int) -> float:
+    inst = st.inst
+    nm = inst.nm[c]
+    inc_gpus = max(0.0, nm - st.y[j, k])
+    data_gb = inst.theta[i] / KB_PER_GB * inst.r[i] * inst.lam[i]
+    return (inst.Delta_T * (inst.p_c[k] * inc_gpus
+                            + inst.p_s * (inst.B[j] + data_gb))
+            + inst.rho[i] * inst.D_cfg[i, j, k, c] * 1e3)
+
+
+def rank_key_ref(st: State, i: int, j: int, k: int, c: int) -> tuple[int, float]:
+    xbar = effective_coverage_ref(st, i, j, k, c)
+    if xbar <= 1e-9:
+        return (2, np.inf)
+    if "no_m2" in st.ablation:
+        return (0, marginal_cost_ref(st, i, j, k, c))
+    pi = int(xbar < st.r_rem[i] - 1e-9)
+    kappa = marginal_cost_ref(st, i, j, k, c) / xbar
+    return (pi, kappa)
+
+
+def _kv_tokens_ref(st: State, j: int, k: int) -> float:
+    inst = st.inst
+    return float(np.sum(inst.r * inst.T_res[:, j, k] * st.x[:, j, k]))
+
+
+def max_commit_ref(st: State, i: int, j: int, k: int, c: int) -> float:
+    """From-scratch (8f)/(8g)/(8h)/(8c) cap computation over the raw state."""
+    inst = st.inst
+    nm = float(inst.nm[c])
+    cap = effective_coverage_ref(st, i, j, k, c)
+    if "no_m1" in st.ablation:
+        pass
+    elif inst.kv_applicable[j]:
+        head_gb = inst.C_gpu[k] - inst.B_eff[j, k] / nm \
+            - (inst.beta[j] / KB_PER_GB) / nm * _kv_tokens_ref(st, j, k)
+        per_x = (inst.beta[j] / KB_PER_GB) / nm \
+            * inst.r[i] * inst.T_res[i, j, k]
+        if per_x > 1e-18:
+            cap = min(cap, head_gb / per_x)
+        elif head_gb < 0:
+            return 0.0
+    else:
+        if inst.C_gpu[k] - inst.B_eff[j, k] / nm < 0:
+            return 0.0
+    load = float(np.sum(inst.alpha[:, j, k] * inst.r * inst.lam / 1e3
+                        * st.x[:, j, k]))
+    comp_cap = inst.eta * 3600.0 * inst.P_gpu[k] * nm
+    per_x = inst.alpha[i, j, k] * inst.r[i] * inst.lam[i] / 1e3
+    if per_x > 1e-18:
+        cap = min(cap, (comp_cap - load) / per_x)
+    stor_used = float(np.sum(inst.B[None, :, None] * st.z[i])
+                      + np.sum(inst.theta[i] / KB_PER_GB * inst.r[i]
+                               * inst.lam[i] * st.x[i]))
+    new_weight = inst.B[j] if st.z[i, j, k] < 0.5 else 0.0
+    per_x = inst.theta[i] / KB_PER_GB * inst.r[i] * inst.lam[i]
+    if per_x > 1e-18:
+        cap = min(cap, (inst.C_s - stor_used - new_weight) / per_x)
+    inc_gpus = max(0.0, inst.nm[c] - st.y[j, k])
+    fixed = inst.Delta_T * (inst.p_c[k] * inc_gpus
+                            + (inst.p_s * inst.B[j] if st.z[i, j, k] < 0.5 else 0.0))
+    per_x = inst.Delta_T * inst.p_s * inst.theta[i] / KB_PER_GB \
+        * inst.r[i] * inst.lam[i]
+    if st.spend + fixed > inst.delta:
+        return 0.0
+    if per_x > 1e-18:
+        cap = min(cap, (inst.delta - st.spend - fixed) / per_x)
+    return max(0.0, float(cap))
+
+
+def commit_ref(st: State, i: int, j: int, k: int, c: int, frac: float) -> None:
+    """The seed commit: per-cell updates plus a Python retime loop. Does not
+    maintain the incremental aggregates of the vectorized State."""
+    inst = st.inst
+    if frac <= 0:
+        return
+    nm = int(inst.nm[c])
+    inc_gpus = max(0, nm - int(st.y[j, k]))
+    new_adm = st.z[i, j, k] < 0.5
+    c_old = int(st.cfg[j, k])
+    if c_old >= 0 and c_old != c:
+        for i2 in range(inst.I):
+            if st.x[i2, j, k] > 1e-12:
+                st.D_used[i2] += (inst.D_cfg[i2, j, k, c]
+                                  - inst.D_cfg[i2, j, k, c_old]) * st.x[i2, j, k]
+    st.x[i, j, k] += frac
+    st.z[i, j, k] = 1.0
+    st.q[j, k] = 1.0
+    st.cfg[j, k] = c
+    st.y[j, k] = nm
+    st.r_rem[i] = max(0.0, st.r_rem[i] - frac)
+    st.E_used[i] += inst.e_bar[i, j, k] * frac
+    st.D_used[i] += inst.D_cfg[i, j, k, c] * frac
+    st.spend += inst.Delta_T * (
+        inst.p_c[k] * inc_gpus
+        + (inst.p_s * inst.B[j] if new_adm else 0.0)
+        + inst.p_s * inst.theta[i] / KB_PER_GB * inst.r[i] * inst.lam[i] * frac)
+    st.uncovered.discard(i)
+
+
+# ---------------------------------------------------------------------------
+# GH (scalar)
+# ---------------------------------------------------------------------------
+
+def _phase1_ref(st: State) -> None:
+    inst = st.inst
+    while st.uncovered and st.spend < inst.phase1_beta * inst.delta:
+        best = None  # (score, j, k, cfg_idx, nm, members)
+        for j in range(inst.J):
+            for k in range(inst.K):
+                if st.q[j, k] > 0.5:
+                    continue
+                members, worst_c, worst_nm = [], None, 0
+                for i in sorted(st.uncovered):
+                    c = m1_select_ref(inst, i, j, k, ablation=st.ablation)
+                    if c is None or inst.e_bar[i, j, k] > inst.eps[i]:
+                        continue
+                    members.append(i)
+                    if inst.nm[c] > worst_nm:
+                        worst_nm, worst_c = int(inst.nm[c]), c
+                if not members:
+                    continue
+                cost = inst.Delta_T * inst.p_c[k] * worst_nm   # eq. (14)
+                if st.spend + cost > inst.phase1_beta * inst.delta:
+                    continue
+                score = len(members) / cost
+                if best is None or score > best[0]:
+                    best = (score, j, k, worst_c, worst_nm, members)
+        if best is None:
+            break
+        _, j, k, c, nm, members = best
+        st.q[j, k] = 1.0
+        st.cfg[j, k] = c
+        st.y[j, k] = nm
+        st.spend += inst.Delta_T * inst.p_c[k] * nm
+        for i in members:
+            st.uncovered.discard(i)
+
+
+def _phase2_ref(st: State, order: np.ndarray) -> None:
+    inst = st.inst
+    for i in order:
+        i = int(i)
+        cands: list[tuple[tuple[int, float], int, int, int]] = []
+        for j in range(inst.J):
+            for k in range(inst.K):
+                if st.q[j, k] > 0.5:
+                    c = int(st.cfg[j, k])
+                    if inst.D_cfg[i, j, k, c] > inst.Delta[i]:
+                        if "no_m3" in st.ablation:
+                            pass                               # route anyway
+                        else:
+                            c2 = m3_upgrade_ref(st, i, j, k)   # M3
+                            if c2 is None:
+                                continue
+                            c = c2
+                else:
+                    c0 = m1_select_ref(inst, i, j, k,
+                                       ablation=st.ablation)   # M1
+                    if c0 is None:
+                        continue
+                    c = c0
+                key = rank_key_ref(st, i, j, k, c)             # M2
+                if not np.isfinite(key[1]):
+                    continue
+                cands.append((key, j, k, c))
+        cands.sort(key=lambda t: t[0])
+        for key, j, k, c in cands:
+            if st.r_rem[i] <= 1e-9:
+                break
+            if st.q[j, k] > 0.5 and c != st.cfg[j, k] and inst.nm[c] <= st.y[j, k]:
+                c_use = int(st.cfg[j, k])
+                if inst.D_cfg[i, j, k, c_use] > inst.Delta[i]:
+                    continue
+            else:
+                c_use = c
+            frac = min(st.r_rem[i], max_commit_ref(st, i, j, k, c_use))
+            if frac <= 1e-9:
+                continue
+            commit_ref(st, i, j, k, c_use, frac)
+
+
+def gh_scalar(inst: Instance, order: np.ndarray | None = None,
+              run_phase1: bool = True,
+              ablation: frozenset = frozenset()) -> tuple[Solution, State]:
+    """Reference single-pass GH; mirrors `gh.greedy_heuristic`."""
+    st = State.fresh(inst, ablation=ablation)
+    if run_phase1:
+        _phase1_ref(st)
+    if order is None:
+        order = np.argsort(-inst.lam)
+    _phase2_ref(st, np.asarray(order))
+    sol = Solution.empty(inst)
+    sol.x, sol.y, sol.q, sol.z = st.x, st.y, st.q, st.z
+    sol.u = np.clip(st.r_rem, 0.0, None)
+    for j in range(inst.J):
+        for k in range(inst.K):
+            if st.q[j, k] > 0.5 and st.cfg[j, k] >= 0:
+                sol.w[j, k, int(st.cfg[j, k])] = 1.0
+    sol.method = "GH-ref"
+    return sol, st
+
+
+# ---------------------------------------------------------------------------
+# AGH (scalar): from-scratch state rebuilds per trial move
+# ---------------------------------------------------------------------------
+
+def _rebuild_state_ref(inst: Instance, sol: Solution) -> State:
+    st = State.fresh(inst)
+    st.x = sol.x.copy()
+    st.y = sol.y.copy()
+    st.q = sol.q.copy()
+    st.z = sol.z.copy()
+    st.cfg = np.where(sol.q > 0.5, np.argmax(sol.w, axis=2), -1)
+    st.r_rem = np.clip(1.0 - sol.x.sum(axis=(1, 2)), 0.0, None)
+    st.E_used = np.einsum("ijk,ijk->i", inst.e_bar, sol.x)
+    xw = sol.x[:, :, :, None] * sol.w[None, :, :, :]
+    st.D_used = np.einsum("ijkc,ijkc->i", xw, inst.D_cfg)
+    data = inst.Delta_T * inst.p_s * float(np.sum(
+        inst.theta[:, None, None] / KB_PER_GB * inst.r[:, None, None]
+        * inst.lam[:, None, None] * sol.x))
+    st.spend = (inst.Delta_T * float(np.sum(inst.p_c[None, :] * sol.y))
+                + inst.Delta_T * inst.p_s * float(np.sum(inst.B[None, :, None] * sol.z))
+                + data)
+    st.uncovered = set()
+    return st
+
+
+def _solution_from_state_ref(inst: Instance, st: State) -> Solution:
+    sol = Solution.empty(inst)
+    sol.x, sol.y, sol.q, sol.z = st.x, st.y, st.q, st.z
+    sol.u = np.clip(st.r_rem, 0.0, None)
+    for j in range(inst.J):
+        for k in range(inst.K):
+            if st.q[j, k] > 0.5 and st.cfg[j, k] >= 0:
+                sol.w[j, k, int(st.cfg[j, k])] = 1.0
+    return sol
+
+
+def _try_move_ref(inst: Instance, sol: Solution, i: int, j: int, k: int,
+                  j2: int, k2: int, best_obj: float) -> Solution | None:
+    frac = sol.x[i, j, k]
+    trial = sol.copy()
+    trial.x[i, j, k] = 0.0
+    trial.z[i, j, k] = 0.0
+    if trial.x[:, j, k].sum() <= 1e-12:
+        trial.q[j, k] = 0.0
+        trial.y[j, k] = 0.0
+        trial.w[j, k, :] = 0.0
+        trial.z[:, j, k] = 0.0
+    st = _rebuild_state_ref(inst, trial)
+    if st.q[j2, k2] > 0.5:
+        c = int(st.cfg[j2, k2])
+        if inst.D_cfg[i, j2, k2, c] > inst.Delta[i]:
+            return None
+    else:
+        c = m1_select_ref(inst, i, j2, k2)
+        if c is None:
+            return None
+    if max_commit_ref(st, i, j2, k2, c) < frac - 1e-9:
+        return None
+    commit_ref(st, i, j2, k2, c, frac)
+    cand = _solution_from_state_ref(inst, st)
+    if not is_feasible(inst, cand, enforce_zeta=False):
+        return None
+    if objective(inst, cand) < best_obj - 1e-9:
+        return cand
+    return None
+
+
+def _move_targets_ref(inst: Instance, sol: Solution, i: int,
+                      n_inactive: int = 3) -> list[tuple[int, int]]:
+    active = [(j, k) for j in range(inst.J) for k in range(inst.K)
+              if sol.q[j, k] > 0.5]
+    inactive = []
+    for j in range(inst.J):
+        for k in range(inst.K):
+            if sol.q[j, k] > 0.5:
+                continue
+            c = m1_select_ref(inst, i, j, k)
+            if c is None or inst.e_bar[i, j, k] > inst.eps[i]:
+                continue
+            inactive.append((inst.p_c[k] * inst.nm[c], j, k))
+    inactive.sort()
+    return active + [(j, k) for _, j, k in inactive[:n_inactive]]
+
+
+def _relocate_ref(inst: Instance, sol: Solution, L: int) -> Solution:
+    for _ in range(L):
+        improved = False
+        obj = objective(inst, sol)
+        for i in range(inst.I):
+            assigned = [(j, k) for j in range(inst.J) for k in range(inst.K)
+                        if sol.x[i, j, k] > 1e-9]
+            for (j, k) in assigned:
+                for (j2, k2) in _move_targets_ref(inst, sol, i):
+                    if (j2, k2) == (j, k):
+                        continue
+                    cand = _try_move_ref(inst, sol, i, j, k, j2, k2, obj)
+                    if cand is not None:
+                        sol = cand
+                        obj = objective(inst, sol)
+                        improved = True
+                        break
+        if not improved:
+            break
+    return sol
+
+
+def _consolidate_ref(inst: Instance, sol: Solution) -> Solution:
+    while True:
+        active = [(float(sol.y[j, k]), j, k)
+                  for j in range(inst.J) for k in range(inst.K)
+                  if sol.q[j, k] > 0.5]
+        active.sort()
+        improved = False
+        for _, j, k in active:
+            types = [i for i in range(inst.I) if sol.x[i, j, k] > 1e-9]
+            trial = sol.copy()
+            obj = objective(inst, sol)
+            ok = True
+            for i in types:
+                frac = trial.x[i, j, k]
+                trial.x[i, j, k] = 0.0
+                trial.z[i, j, k] = 0.0
+                st = _rebuild_state_ref(inst, trial)
+                st.q[j, k] = 0.0  # forbid re-landing on the pair being drained
+                placed = False
+                for j2 in range(inst.J):
+                    for k2 in range(inst.K):
+                        if (j2, k2) == (j, k) or st.q[j2, k2] < 0.5:
+                            continue
+                        c = int(st.cfg[j2, k2])
+                        if inst.D_cfg[i, j2, k2, c] > inst.Delta[i]:
+                            continue
+                        if max_commit_ref(st, i, j2, k2, c) >= frac - 1e-9:
+                            commit_ref(st, i, j2, k2, c, frac)
+                            trial = _solution_from_state_ref(inst, st)
+                            placed = True
+                            break
+                    if placed:
+                        break
+                if not placed:
+                    ok = False
+                    break
+            if not ok:
+                continue
+            trial.q[j, k] = 0.0
+            trial.y[j, k] = 0.0
+            trial.w[j, k, :] = 0.0
+            trial.z[:, j, k] = 0.0
+            if (is_feasible(inst, trial, enforce_zeta=False)
+                    and objective(inst, trial) < obj - 1e-9):
+                sol = trial
+                improved = True
+                break
+        if not improved:
+            return sol
+
+
+def agh_scalar(inst: Instance, R: int | None = None, L: int = 3, seed: int = 0,
+               patience: int = 5) -> Solution:
+    """Reference AGH; mirrors `agh.agh` (same orderings / early stop)."""
+    from .agh import _adaptive_R, _orderings
+
+    rng = np.random.default_rng(seed)
+    if R is None:
+        R = _adaptive_R(inst)
+    best: Solution | None = None
+    best_obj = np.inf
+    stale = 0
+    for order in _orderings(inst, R, rng):
+        sol, _ = gh_scalar(inst, order=order)
+        sol = _relocate_ref(inst, sol, L)
+        sol = _consolidate_ref(inst, sol)
+        obj = objective(inst, sol)
+        if obj < best_obj - 1e-9:
+            best, best_obj = sol, obj
+            stale = 0
+        else:
+            stale += 1
+            if stale >= patience:
+                break
+    assert best is not None
+    best.method = "AGH-ref"
+    return best

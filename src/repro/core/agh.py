@@ -1,4 +1,4 @@
-"""Adaptive Greedy Heuristic (AGH) — paper Algorithm 2.
+"""Adaptive Greedy Heuristic (AGH) — paper Algorithm 2, vectorized.
 
 Enhancements over GH:
   * multi-start construction: 8 deterministic orderings (ascending/descending
@@ -10,6 +10,17 @@ Enhancements over GH:
     alternative pairs when feasible and strictly improving;
   * consolidation: drain lightly loaded active pairs onto other active pairs
     and deactivate them when feasible and strictly improving.
+
+Local-search evaluation is delta-based: a trial move mutates the running
+`State` through `remove_assignment` / `commit` (each pushing an exact undo
+record), the objective delta comes from `state_objective` in O(I), and a
+rejected move is rolled back with `undo_all` — no Solution copies, no
+from-scratch State rebuilds, no full constraint-system re-evaluation per
+trial.  Feasibility is guaranteed by construction (`max_commit` caps every
+commit); the full `feasibility()` pass survives as the final debug check on
+the returned solution (and per-move when `validate=True`).  The seed's
+rebuild-everything implementation is preserved in `_scalar_ref.agh_scalar`
+and pinned to this one by tests/test_vectorized_equivalence.py.
 """
 from __future__ import annotations
 
@@ -19,7 +30,10 @@ import numpy as np
 
 from .gh import greedy_heuristic
 from .instance import Instance
-from .mechanisms import State, commit, m1_select, max_commit
+from .mechanisms import (State, commit, deactivate_pair, max_commit,
+                         max_commit_batch, remove_assignment,
+                         solution_from_state, state_objective, state_restore,
+                         state_snapshot, undo_all)
 from .solution import Solution, is_feasible, objective
 
 
@@ -53,169 +67,181 @@ def _adaptive_R(inst: Instance) -> int:
 
 
 # ---------------------------------------------------------------------------
-# Local search
+# Local search (delta moves on the running State)
 # ---------------------------------------------------------------------------
 
-def _rebuild_state(inst: Instance, sol: Solution) -> State:
-    st = State.fresh(inst)
-    st.x = sol.x.copy()
-    st.y = sol.y.copy()
-    st.q = sol.q.copy()
-    st.z = sol.z.copy()
-    st.cfg = np.where(sol.q > 0.5, np.argmax(sol.w, axis=2), -1)
-    st.r_rem = np.clip(1.0 - sol.x.sum(axis=(1, 2)), 0.0, None)
-    st.E_used = np.einsum("ijk,ijk->i", inst.e_bar, sol.x)
-    xw = sol.x[:, :, :, None] * sol.w[None, :, :, :]
-    st.D_used = np.einsum("ijkc,ijkc->i", xw, inst.D_cfg)
-    from .instance import KB_PER_GB
-    data = inst.Delta_T * inst.p_s * float(np.sum(
-        inst.theta[:, None, None] / KB_PER_GB * inst.r[:, None, None]
-        * inst.lam[:, None, None] * sol.x))
-    st.spend = (inst.Delta_T * float(np.sum(inst.p_c[None, :] * sol.y))
-                + inst.Delta_T * inst.p_s * float(np.sum(inst.B[None, :, None] * sol.z))
-                + data)
-    st.uncovered = set()
-    return st
+def _try_move(st: State, i: int, j: int, k: int, j2: int, k2: int,
+              best_obj: float, validate: bool) -> float | None:
+    """Move all of x[i,j,k] to (j2,k2); keep if feasible & improving.
 
-
-def _solution_from_state(inst: Instance, st: State) -> Solution:
-    sol = Solution.empty(inst)
-    sol.x, sol.y, sol.q, sol.z = st.x, st.y, st.q, st.z
-    sol.u = np.clip(st.r_rem, 0.0, None)
-    for j in range(inst.J):
-        for k in range(inst.K):
-            if st.q[j, k] > 0.5 and st.cfg[j, k] >= 0:
-                sol.w[j, k, int(st.cfg[j, k])] = 1.0
-    return sol
-
-
-def _try_move(inst: Instance, sol: Solution, i: int, j: int, k: int,
-              j2: int, k2: int, best_obj: float) -> Solution | None:
-    """Move all of x[i,j,k] to (j2,k2); accept if feasible & improving."""
-    frac = sol.x[i, j, k]
-    trial = sol.copy()
-    trial.x[i, j, k] = 0.0
-    trial.z[i, j, k] = 0.0
-    # Deactivate (j,k) if nothing else uses it.
-    if trial.x[:, j, k].sum() <= 1e-12:
-        trial.q[j, k] = 0.0
-        trial.y[j, k] = 0.0
-        trial.w[j, k, :] = 0.0
-        trial.z[:, j, k] = 0.0
-    st = _rebuild_state(inst, trial)
+    Returns the new objective on success (state mutated), None on rejection
+    (state rolled back exactly)."""
+    inst = st.inst
+    undo: list = []
+    frac = remove_assignment(st, i, j, k, undo=undo)
     if st.q[j2, k2] > 0.5:
         c = int(st.cfg[j2, k2])
         if inst.D_cfg[i, j2, k2, c] > inst.Delta[i]:
+            undo_all(st, undo)
             return None
     else:
-        c = m1_select(inst, i, j2, k2)
-        if c is None:
+        c = int(inst.cfg_m1[i, j2, k2])
+        if c < 0:
+            undo_all(st, undo)
             return None
     if max_commit(st, i, j2, k2, c) < frac - 1e-9:
+        undo_all(st, undo)
         return None
-    commit(st, i, j2, k2, c, frac)
-    cand = _solution_from_state(inst, st)
-    if not is_feasible(inst, cand, enforce_zeta=False):
-        return None
-    if objective(inst, cand) < best_obj - 1e-9:
-        return cand
+    commit(st, i, j2, k2, c, frac, undo=undo)
+    obj_new = state_objective(st)
+    if obj_new < best_obj - 1e-9:
+        if validate:
+            _assert_state_consistent(st)
+        return obj_new
+    undo_all(st, undo)
     return None
 
 
-def _move_targets(inst: Instance, sol: Solution, i: int,
+def _move_targets(st: State, i: int, ranked_jk: np.ndarray,
                   n_inactive: int = 3) -> list[tuple[int, int]]:
     """Candidate destinations for relocating type i: every ACTIVE pair plus
     the few cheapest inactive pairs that pass M1 for this type. (The paper
-    scans all (j', k'); restricting to this set is what keeps the pure-
-    Python relocate within the paper's runtime envelope — the optimum of
-    a move almost always shares or cheaply activates.)"""
-    active = [(j, k) for j in range(inst.J) for k in range(inst.K)
-              if sol.q[j, k] > 0.5]
-    inactive = []
-    for j in range(inst.J):
-        for k in range(inst.K):
-            if sol.q[j, k] > 0.5:
-                continue
-            c = m1_select(inst, i, j, k)
-            if c is None or inst.e_bar[i, j, k] > inst.eps[i]:
-                continue
-            inactive.append((inst.p_c[k] * inst.nm[c], j, k))
-    inactive.sort()
-    return active + [(j, k) for _, j, k in inactive[:n_inactive]]
+    scans all (j', k'); restricting to this set keeps relocate inside the
+    paper's runtime envelope — the optimum of a move almost always shares
+    or cheaply activates.)  `ranked_jk` is the per-type list of admissible
+    pairs pre-sorted by activation cost, computed once per AGH call."""
+    K = st.inst.K
+    targets = [(int(f) // K, int(f) % K)
+               for f in np.flatnonzero((st.q > 0.5).ravel())]
+    taken = 0
+    for f in ranked_jk:
+        j, k = int(f) // K, int(f) % K
+        if st.q[j, k] > 0.5:
+            continue
+        targets.append((j, k))
+        taken += 1
+        if taken >= n_inactive:
+            break
+    return targets
 
 
-def _relocate(inst: Instance, sol: Solution, L: int) -> Solution:
+def _rank_inactive_targets(inst: Instance) -> list[np.ndarray]:
+    """Per type: flat (j,k) indices of M1+error-admissible pairs, sorted by
+    activation cost p_c[k] * nm(M1 config) with j-major tie order — the
+    state-independent part of `_move_targets`."""
+    ranked = []
+    for i in range(inst.I):
+        flat = np.flatnonzero(inst.cover_ok[i].ravel())
+        cost = (inst.p_c[flat % inst.K]
+                * inst.nm[inst.cfg_m1[i].ravel()[flat]])
+        ranked.append(flat[np.argsort(cost, kind="stable")])
+    return ranked
+
+
+def _relocate(st: State, L: int, ranked: list[np.ndarray],
+              validate: bool) -> None:
+    inst = st.inst
     for _ in range(L):
         improved = False
-        obj = objective(inst, sol)
+        obj = state_objective(st)
         for i in range(inst.I):
-            assigned = [(j, k) for j in range(inst.J) for k in range(inst.K)
-                        if sol.x[i, j, k] > 1e-9]
+            assigned = [(int(f) // inst.K, int(f) % inst.K)
+                        for f in np.flatnonzero((st.x[i] > 1e-9).ravel())]
             for (j, k) in assigned:
-                for (j2, k2) in _move_targets(inst, sol, i):
+                for (j2, k2) in _move_targets(st, i, ranked[i]):
                     if (j2, k2) == (j, k):
                         continue
-                    cand = _try_move(inst, sol, i, j, k, j2, k2, obj)
-                    if cand is not None:
-                        sol = cand
-                        obj = objective(inst, sol)
+                    obj_new = _try_move(st, i, j, k, j2, k2, obj, validate)
+                    if obj_new is not None:
+                        obj = obj_new
                         improved = True
                         break
         if not improved:
             break
-    return sol
 
 
-def _consolidate(inst: Instance, sol: Solution) -> Solution:
+def _try_drain(st: State, j: int, k: int, validate: bool) -> bool:
+    """Drain every type off pair (j,k) onto other active pairs and shut the
+    pair down; keep only if all traffic lands and the objective improves.
+
+    Replicates the scalar reference's per-type rebuild semantics: after the
+    first successful placement the drained pair's config selector is
+    cleared, so its remaining traffic stops counting toward D_used while
+    the later types are being placed."""
+    inst = st.inst
+    snap = state_snapshot(st)
+    obj0 = state_objective(st)
+    types = [int(i) for i in np.flatnonzero(st.x[:, j, k] > 1e-9)]
+    c_pair = int(st.cfg[j, k])
+    suspended = False
+    ok = True
+    for i in types:
+        frac = float(st.x[i, j, k])
+        remove_assignment(st, i, j, k, timed=not suspended,
+                          auto_deactivate=False)
+        # One batched (8c)–(8h) cap evaluation over all destinations; the
+        # first-fit scan below then touches no per-pair Python arithmetic.
+        c_dest = np.where(st.q > 0.5, st.cfg, -1)
+        c_dest[j, k] = -1
+        caps = max_commit_batch(st, i, c_dest)
+        d_dest = np.take_along_axis(
+            inst.D_cfg[i], np.maximum(c_dest, 0)[:, :, None], axis=2)[:, :, 0]
+        fits = ((c_dest >= 0) & (d_dest <= inst.Delta[i])
+                & (caps >= frac - 1e-9)).ravel()
+        placed = False
+        for f in np.flatnonzero(fits):
+            j2, k2 = int(f) // inst.K, int(f) % inst.K
+            commit(st, i, j2, k2, int(st.cfg[j2, k2]), frac)
+            placed = True
+            break
+        if not placed:
+            ok = False
+            break
+        if not suspended:
+            # First placement materialized a solution with the drained
+            # pair's w zeroed — its residual delay contributions vanish.
+            st.D_used -= inst.D_cfg[:, j, k, c_pair] * st.x[:, j, k]
+            st.q[j, k] = 0.0
+            st.cfg[j, k] = -1
+            suspended = True
+    if ok:
+        if not suspended:
+            if c_pair >= 0:
+                st.D_used -= inst.D_cfg[:, j, k, c_pair] * st.x[:, j, k]
+        deactivate_pair(st, j, k)
+        if state_objective(st) < obj0 - 1e-9:
+            if validate:
+                _assert_state_consistent(st)
+            return True
+    state_restore(st, snap)
+    return False
+
+
+def _consolidate(st: State, validate: bool) -> None:
     """Drain lightly loaded pairs onto other active pairs (Alg. 2 l.10–12)."""
+    inst = st.inst
     while True:
-        active = [(float(sol.y[j, k]), j, k)
-                  for j in range(inst.J) for k in range(inst.K)
-                  if sol.q[j, k] > 0.5]
-        active.sort()
+        flat = np.flatnonzero((st.q > 0.5).ravel())
+        active = sorted((float(st.y.ravel()[f]), int(f) // inst.K,
+                         int(f) % inst.K) for f in flat)
         improved = False
         for _, j, k in active:
-            types = [i for i in range(inst.I) if sol.x[i, j, k] > 1e-9]
-            trial = sol.copy()
-            obj = objective(inst, sol)
-            ok = True
-            for i in types:
-                frac = trial.x[i, j, k]
-                trial.x[i, j, k] = 0.0
-                trial.z[i, j, k] = 0.0
-                st = _rebuild_state(inst, trial)
-                st.q[j, k] = 0.0  # forbid re-landing on the pair being drained
-                placed = False
-                for j2 in range(inst.J):
-                    for k2 in range(inst.K):
-                        if (j2, k2) == (j, k) or st.q[j2, k2] < 0.5:
-                            continue
-                        c = int(st.cfg[j2, k2])
-                        if inst.D_cfg[i, j2, k2, c] > inst.Delta[i]:
-                            continue
-                        if max_commit(st, i, j2, k2, c) >= frac - 1e-9:
-                            commit(st, i, j2, k2, c, frac)
-                            trial = _solution_from_state(inst, st)
-                            placed = True
-                            break
-                    if placed:
-                        break
-                if not placed:
-                    ok = False
-                    break
-            if not ok:
-                continue
-            trial.q[j, k] = 0.0
-            trial.y[j, k] = 0.0
-            trial.w[j, k, :] = 0.0
-            trial.z[:, j, k] = 0.0
-            if (is_feasible(inst, trial, enforce_zeta=False)
-                    and objective(inst, trial) < obj - 1e-9):
-                sol = trial
+            if _try_drain(st, j, k, validate):
                 improved = True
                 break
         if not improved:
-            return sol
+            return
+
+
+def _assert_state_consistent(st: State) -> None:
+    """Debug path: the incremental state must match a from-scratch
+    objective/feasibility evaluation of its materialized solution."""
+    inst = st.inst
+    sol = solution_from_state(inst, st)
+    full = objective(inst, sol)
+    fast = state_objective(st)
+    assert abs(full - fast) <= 1e-6 * max(1.0, abs(full)), (full, fast)
+    assert is_feasible(inst, sol, enforce_zeta=False)
 
 
 # ---------------------------------------------------------------------------
@@ -223,27 +249,32 @@ def _consolidate(inst: Instance, sol: Solution) -> Solution:
 # ---------------------------------------------------------------------------
 
 def agh(inst: Instance, R: int | None = None, L: int = 3, seed: int = 0,
-        patience: int = 5) -> Solution:
+        patience: int = 5, validate: bool = False) -> Solution:
     t0 = time.perf_counter()
     rng = np.random.default_rng(seed)
     if R is None:
         R = _adaptive_R(inst)
+    ranked = _rank_inactive_targets(inst)
     best: Solution | None = None
     best_obj = np.inf
     stale = 0
     for order in _orderings(inst, R, rng):
-        sol, _ = greedy_heuristic(inst, order=order)
-        sol = _relocate(inst, sol, L)
-        sol = _consolidate(inst, sol)
-        obj = objective(inst, sol)
+        _, st = greedy_heuristic(inst, order=order)
+        _relocate(st, L, ranked, validate)
+        _consolidate(st, validate)
+        obj = state_objective(st)
         if obj < best_obj - 1e-9:
-            best, best_obj = sol, obj
+            best, best_obj = solution_from_state(inst, st), obj
             stale = 0
         else:
             stale += 1
             if stale >= patience:
                 break
     assert best is not None
+    # Final check: the delta-maintained state must stand up to the full
+    # constraint system (cheap — once per AGH call, not per move).
+    assert is_feasible(inst, best, enforce_zeta=False), \
+        "AGH produced an infeasible solution (incremental-state bug)"
     best.runtime_s = time.perf_counter() - t0
     best.method = "AGH"
     return best

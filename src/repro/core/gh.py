@@ -1,13 +1,20 @@
-"""Greedy Heuristic (GH) — paper Algorithm 1.
+"""Greedy Heuristic (GH) — paper Algorithm 1, vectorized.
 
 Phase 1 (coverage pre-allocation): greedy set-cover that activates one
 (model, tier) pair at a time, maximizing uncovered-types-covered per dollar
 of horizon rental, until every type is covered or the Phase-1 budget cap
-(beta * delta, beta = 0.8) is reached.
+(beta * delta, beta = 0.8) is reached.  Each round scores every candidate
+pair with one pass of array ops over the precomputed M1 tables instead of a
+triple Python loop.
 
 Phase 2 (sequential allocation): processes query types in a given order
-(default: descending arrival rate), ranking candidates with M2 and committing
-traffic with full (8f)-(8h) + budget verification.
+(default: descending arrival rate).  Per type, the M2 keys of all (j,k)
+candidates are produced by `rank_keys_all` and ordered with one stable
+lexsort; commits then run down that order with O(1) `max_commit` checks
+against the State's incremental aggregates.
+
+Behavioral equivalence with the scalar seed path (`_scalar_ref.gh_scalar`)
+is enforced by tests/test_vectorized_equivalence.py.
 """
 from __future__ import annotations
 
@@ -16,77 +23,89 @@ import time
 import numpy as np
 
 from .instance import Instance
-from .mechanisms import (State, commit, m1_select, m3_upgrade, marginal_cost,
-                         max_commit, rank_key)
+from .mechanisms import (State, commit, m3_upgrade, max_commit, rank_keys_all,
+                         solution_from_state)
 from .solution import Solution
 
 
 def _phase1(st: State) -> None:
     inst = st.inst
-    while st.uncovered and st.spend < inst.phase1_beta * inst.delta:
-        best = None  # (score, j, k, cfg_idx, nm, members)
-        for j in range(inst.J):
-            for k in range(inst.K):
-                if st.q[j, k] > 0.5:
-                    continue
-                members, worst_c, worst_nm = [], None, 0
-                for i in sorted(st.uncovered):
-                    c = m1_select(inst, i, j, k, ablation=st.ablation)
-                    if c is None or inst.e_bar[i, j, k] > inst.eps[i]:
-                        continue
-                    members.append(i)
-                    if inst.nm[c] > worst_nm:
-                        worst_nm, worst_c = int(inst.nm[c]), c
-                if not members:
-                    continue
-                cost = inst.Delta_T * inst.p_c[k] * worst_nm   # eq. (14)
-                if st.spend + cost > inst.phase1_beta * inst.delta:
-                    continue
-                score = len(members) / cost
-                if best is None or score > best[0]:
-                    best = (score, j, k, worst_c, worst_nm, members)
-        if best is None:
+    I, J, K = inst.I, inst.J, inst.K
+    no_m1 = "no_m1" in st.ablation
+    if no_m1:
+        # Ablated M1 "selects" the cheapest config everywhere; only the
+        # error-SLO filter remains on membership.
+        cfg_eff = np.full((I, J, K), inst.cfg_min_nm, dtype=np.int64)
+        nm_eff = np.full((I, J, K), int(inst.nm[inst.cfg_min_nm]),
+                         dtype=np.int64)
+        cover = inst.e_ok
+    else:
+        cfg_eff, nm_eff, cover = inst.cfg_m1, inst.m1_nm, inst.cover_ok
+    cap = inst.phase1_beta * inst.delta
+    while st.uncovered and st.spend < cap:
+        unc = np.zeros(I, dtype=bool)
+        unc[list(st.uncovered)] = True
+        members = cover & unc[:, None, None]              # [I,J,K]
+        cnt = members.sum(axis=0)                         # [J,K]
+        valid = (cnt > 0) & (st.q <= 0.5)
+        if not valid.any():
             break
-        _, j, k, c, nm, members = best
+        nm_m = np.where(members, nm_eff, 0)
+        worst_nm = nm_m.max(axis=0)                       # [J,K]
+        # Config of the first (lowest-i) member attaining the max nm —
+        # the scalar scan's `nm > worst_nm` keep-first tie-breaking.
+        first_i = np.argmax(members & (nm_m == worst_nm[None]), axis=0)
+        worst_c = np.take_along_axis(cfg_eff, first_i[None], axis=0)[0]
+        cost = inst.Delta_T * inst.p_c[None, :] * worst_nm   # eq. (14)
+        valid &= st.spend + cost <= cap
+        if not valid.any():
+            break
+        score = np.full((J, K), -np.inf)
+        score[valid] = cnt[valid] / cost[valid]
+        flat = int(np.argmax(score))                      # first max: j-major
+        j, k = flat // K, flat % K
         st.q[j, k] = 1.0
-        st.cfg[j, k] = c
-        st.y[j, k] = nm
-        st.spend += inst.Delta_T * inst.p_c[k] * nm
-        for i in members:
-            st.uncovered.discard(i)
+        st.cfg[j, k] = int(worst_c[j, k])
+        st.y[j, k] = int(worst_nm[j, k])
+        st.spend += float(cost[j, k])
+        st.uncovered -= set(int(i) for i in np.flatnonzero(members[:, j, k]))
 
 
 def _phase2(st: State, order: np.ndarray) -> None:
     inst = st.inst
+    K = inst.K
+    no_m1 = "no_m1" in st.ablation
+    no_m3 = "no_m3" in st.ablation
     for i in order:
         i = int(i)
-        cands: list[tuple[tuple[int, float], int, int, int]] = []
-        for j in range(inst.J):
-            for k in range(inst.K):
-                if st.q[j, k] > 0.5:
-                    c = int(st.cfg[j, k])
-                    if inst.D_cfg[i, j, k, c] > inst.Delta[i]:
-                        if "no_m3" in st.ablation:
-                            pass                           # route anyway
-                        else:
-                            c2 = m3_upgrade(st, i, j, k)   # M3
-                            if c2 is None:
-                                continue
-                            c = c2
-                else:
-                    c0 = m1_select(inst, i, j, k,
-                                   ablation=st.ablation)   # M1
-                    if c0 is None:
-                        continue
-                    c = c0
-                key = rank_key(st, i, j, k, c)             # M2
-                if not np.isfinite(key[1]):
-                    continue
-                cands.append((key, j, k, c))
-        cands.sort(key=lambda t: t[0])
-        for key, j, k, c in cands:
+        active = st.q > 0.5
+        if no_m1:
+            c_inact = np.full((inst.J, K), inst.cfg_min_nm, dtype=np.int64)
+        else:
+            c_inact = inst.cfg_m1[i]
+        c_arr = np.where(active, st.cfg, c_inact)         # [J,K], -1 = none
+        # Active pairs whose current config breaks the type's delay SLO
+        # either get an M3 upgrade or (ablated) are routed to anyway.
+        if not no_m3:
+            d_cur = np.take_along_axis(
+                inst.D_cfg[i], np.maximum(c_arr, 0)[:, :, None],
+                axis=2)[:, :, 0]
+            viol = active & (c_arr >= 0) & (d_cur > inst.Delta[i])
+            for j, k in zip(*np.nonzero(viol)):
+                c2 = m3_upgrade(st, i, int(j), int(k))    # M3
+                c_arr[j, k] = -1 if c2 is None else c2
+        pi, kappa, valid = rank_keys_all(st, i, c_arr)    # M2 (batched)
+        idx = np.flatnonzero(valid.ravel())
+        if idx.size == 0:
+            continue
+        # Stable lexsort by (pi, kappa) keeps j-major scan order on ties —
+        # identical to the scalar path's stable tuple sort.
+        idx = idx[np.lexsort((kappa.ravel()[idx], pi.ravel()[idx]))]
+        for flat in idx:
             if st.r_rem[i] <= 1e-9:
                 break
+            j, k = int(flat) // K, int(flat) % K
+            c = int(c_arr[j, k])
             # Re-validate under the *current* state (the pair may have been
             # upgraded while serving an earlier candidate of this type).
             if st.q[j, k] > 0.5 and c != st.cfg[j, k] and inst.nm[c] <= st.y[j, k]:
@@ -103,10 +122,18 @@ def _phase2(st: State, order: np.ndarray) -> None:
 
 def greedy_heuristic(inst: Instance, order: np.ndarray | None = None,
                      run_phase1: bool = True,
-                     ablation: frozenset = frozenset()) -> Solution:
-    """Single-pass GH (Algorithm 1). `order` overrides the Phase-2 query
-    ordering (used by AGH's multi-start); default is descending lambda.
-    `ablation` disables mechanisms for the Table-3 study."""
+                     ablation: frozenset = frozenset()
+                     ) -> tuple[Solution, State]:
+    """Single-pass GH (Algorithm 1).
+
+    `order` overrides the Phase-2 query ordering (used by AGH's
+    multi-start); default is descending lambda.  `ablation` disables
+    mechanisms for the Table-3 study.
+
+    Returns the materialized `Solution` together with the running `State`
+    (whose arrays the Solution shares) so AGH's local search can continue
+    from the construction state without a rebuild.
+    """
     t0 = time.perf_counter()
     st = State.fresh(inst, ablation=ablation)
     if run_phase1:
@@ -114,13 +141,7 @@ def greedy_heuristic(inst: Instance, order: np.ndarray | None = None,
     if order is None:
         order = np.argsort(-inst.lam)
     _phase2(st, np.asarray(order))
-    sol = Solution.empty(inst)
-    sol.x, sol.y, sol.q, sol.z = st.x, st.y, st.q, st.z
-    sol.u = np.clip(st.r_rem, 0.0, None)
-    for j in range(inst.J):
-        for k in range(inst.K):
-            if st.q[j, k] > 0.5 and st.cfg[j, k] >= 0:
-                sol.w[j, k, int(st.cfg[j, k])] = 1.0
+    sol = solution_from_state(inst, st)
     sol.runtime_s = time.perf_counter() - t0
     sol.method = "GH"
     return sol, st

@@ -137,6 +137,70 @@ class Instance:
                       * self.f[:, None, None, None])               # [I,J,K,C]
         # Effective per-token error rate (eq. 1).
         self.e_bar = self.e_base[:, :, None] * self.mu[None, None, :]  # [I,J,K]
+        self._precompute_allocation_tensors()
+
+    def _precompute_allocation_tensors(self) -> None:
+        """State-independent tensors for the vectorized allocation engine.
+
+        Everything here depends only on instance parameters, so it is
+        computed once per instance (and recomputed by `perturbed` /
+        `stressed` / manual `__post_init__` calls) and then reused by every
+        GH construction, AGH ordering, and local-search move:
+
+        * `mem_ok[J,K,C]`   — per-device weight-memory feasibility of each
+                              (TP,PP) config (the memory half of M1 / eq. 9);
+        * `cfg_m1[I,J,K]`   — the M1 winner: lexicographically (nm, delay,
+                              index)-minimal config that fits memory AND the
+                              delay SLO; -1 where no config is feasible;
+        * `m1_nm[I,J,K]`    — nm of the M1 winner (0 where infeasible);
+        * `e_ok` / `cover_ok` — error-SLO admissibility and the Phase-1
+                              coverage mask (M1 feasible AND e_bar <= eps);
+        * `data_gb[I]`      — the static data-storage term of eq. (10),
+                              theta_i/KB * r_i * lam_i (also the per-unit-x
+                              storage coefficient of (8h));
+        * `kv_tok_per_x[I,J,K]` — resident KV tokens per unit x ((8f));
+        * `load_per_x[I,J,K]`   — GFLOP-load per unit x ((8g));
+        * `budget_per_x[I]`     — $ per unit x of data storage ((8c));
+        * `cfg_by_nm[C]`    — config indices sorted by (nm, index), the scan
+                              order M1/M3 tie-breaking is defined over.
+        """
+        I, J, K = self.I, self.J, self.K
+        C = len(self.configs)
+        # Memory feasibility of each config: B_eff/nm <= C_gpu (strict `>`
+        # is the scalar discard condition, so keep `<=` here).
+        per_dev = self.B_eff[:, :, None] / self.nm[None, None, :]   # [J,K,C]
+        self.mem_ok = per_dev <= self.C_gpu[None, :, None]          # [J,K,C]
+        # Joint M1 feasibility per candidate: memory AND delay SLO.
+        feas = self.mem_ok[None, :, :, :] & (
+            self.D_cfg <= self.Delta[:, None, None, None])          # [I,J,K,C]
+        # Lexicographic argmin over (nm, delay, config index): first take the
+        # minimal nm among feasible configs, then the minimal delay within
+        # that nm level, then the first config index (np.argmax on a boolean
+        # picks the first True) — exactly the scalar scan's tie-breaking.
+        big = np.iinfo(np.int64).max
+        nm_masked = np.where(feas, self.nm[None, None, None, :], big)
+        nm_min = nm_masked.min(axis=3)                              # [I,J,K]
+        any_feas = nm_min < big
+        tie = feas & (nm_masked == nm_min[..., None])
+        d_masked = np.where(tie, self.D_cfg, np.inf)
+        d_min = d_masked.min(axis=3)
+        first = tie & (d_masked == d_min[..., None])
+        self.cfg_m1 = np.where(any_feas, first.argmax(axis=3), -1)  # [I,J,K]
+        self.m1_nm = np.where(any_feas, nm_min, 0).astype(np.int64)
+        # No-M1 ablation always "selects" the globally cheapest config.
+        self.cfg_min_nm = int(np.argmin(self.nm))
+        # Error-SLO admissibility and Phase-1 coverage mask.
+        self.e_ok = self.e_bar <= self.eps[:, None, None]           # [I,J,K]
+        self.cover_ok = (self.cfg_m1 >= 0) & self.e_ok
+        # Static eq. (10) data term == per-unit-x coefficient of (8h).
+        self.data_gb = self.theta / KB_PER_GB * self.r * self.lam   # [I]
+        # Per-unit-x coefficients of the running-state caps.
+        self.kv_tok_per_x = self.r[:, None, None] * self.T_res      # [I,J,K]
+        self.load_per_x = (self.alpha * self.r[:, None, None]
+                           * self.lam[:, None, None] / 1e3)         # [I,J,K]
+        self.budget_per_x = self.Delta_T * self.p_s * self.data_gb  # [I]
+        # Config scan order for M3: ascending (nm, index).
+        self.cfg_by_nm = np.lexsort((np.arange(C), self.nm))
 
     # --- sizes ---------------------------------------------------------
     @property

@@ -9,6 +9,19 @@ M2 — cost-per-effective-coverage ranking (eqs. 10–11): rank candidates by
 M3 — TP upgrade on active pairs (eq. 12): before activating a fresh pair,
      try a higher-parallelism configuration on an already-active pair,
      paying only the incremental GPU cost.
+
+Vectorized engine notes
+-----------------------
+M1 winners are precomputed per instance (`Instance.cfg_m1`), M2 keys are
+evaluated for all (j,k) at once (`rank_keys_all`), and the `State` carries
+incremental aggregates — per-pair resident KV tokens (`kv_tok`), per-pair
+compute load (`load`), and per-type storage (`stor_used`) — maintained by
+`commit` / `remove_assignment` so that `max_commit` and the objective are
+O(1) instead of O(I·J·K).  `commit` and `remove_assignment` optionally push
+inverse records onto an undo list (`undo_all` rolls them back exactly),
+which is what lets AGH's local search evaluate a move without copying the
+solution.  The scalar seed implementations live in `_scalar_ref.py` and the
+equivalence suite checks the two paths produce the same allocations.
 """
 from __future__ import annotations
 
@@ -21,7 +34,18 @@ from .instance import Instance, KB_PER_GB
 
 @dataclasses.dataclass
 class State:
-    """Running construction state (paper §4, 'Running state')."""
+    """Running construction state (paper §4, 'Running state').
+
+    Invariants maintained by `commit` / `remove_assignment` (and relied on
+    by `max_commit` / `state_objective`):
+      * kv_tok[j,k]   == sum_i kv_tok_per_x[i,j,k] * x[i,j,k]
+      * load[j,k]     == sum_i load_per_x[i,j,k]   * x[i,j,k]
+      * stor_used[i]  == sum_jk B[j]*z[i,j,k] + data_gb[i]*sum_jk x[i,j,k]
+      * spend         == Delta_T*(sum p_c*y + p_s*(sum B*z + sum data_gb*x))
+      * D_used[i]     == sum_jk D_cfg[i,j,k,cfg[j,k]] * x[i,j,k]  (over
+                         active pairs), E_used likewise with e_bar
+    up to float accumulation order (the equivalence tests allow 1e-9).
+    """
     inst: Instance
     x: np.ndarray          # [I,J,K]
     y: np.ndarray          # [J,K]
@@ -33,6 +57,9 @@ class State:
     D_used: np.ndarray     # [I] cumulative delay
     spend: float           # committed budget $
     uncovered: set[int]    # I^unc
+    kv_tok: np.ndarray     # [J,K] resident KV tokens routed to each pair
+    load: np.ndarray       # [J,K] committed GFLOP load per pair
+    stor_used: np.ndarray  # [I] storage GB committed per query type
     # Ablation switches (paper Table 3): subsets of
     # {"no_m1", "no_m2", "no_m3"}; used ONLY by the ablation benchmark.
     ablation: frozenset = frozenset()
@@ -44,7 +71,9 @@ class State:
                      q=np.zeros((J, K)), cfg=-np.ones((J, K), dtype=int),
                      z=np.zeros((I, J, K)), r_rem=np.ones(I),
                      E_used=np.zeros(I), D_used=np.zeros(I), spend=0.0,
-                     uncovered=set(range(I)), ablation=ablation)
+                     uncovered=set(range(I)), kv_tok=np.zeros((J, K)),
+                     load=np.zeros((J, K)), stor_used=np.zeros(I),
+                     ablation=ablation)
 
 
 # ---------------------------------------------------------------------------
@@ -53,22 +82,16 @@ class State:
 
 def m1_select(inst: Instance, i: int, j: int, k: int,
               ablation: frozenset = frozenset()) -> int | None:
-    """Cheapest feasible config index for (i,j,k) per eq. (9), else None."""
+    """Cheapest feasible config index for (i,j,k) per eq. (9), else None.
+
+    O(1): the lex-(nm, delay, index)-minimal feasible config is precomputed
+    per instance in `Instance.cfg_m1`."""
     if "no_m1" in ablation:
         # Cost-only: always "select" the cheapest config (nm = 1) without
         # the memory/delay filter (paper Table 3: memory violation).
-        return int(np.argmin(inst.nm))
-    best, best_nm, best_d = None, np.inf, np.inf
-    for c, (n, m) in enumerate(inst.configs):
-        nm = n * m
-        if inst.B_eff[j, k] / nm > inst.C_gpu[k]:
-            continue
-        d = inst.D_cfg[i, j, k, c]
-        if d > inst.Delta[i]:
-            continue
-        if nm < best_nm or (nm == best_nm and d < best_d):
-            best, best_nm, best_d = c, nm, d
-    return best
+        return inst.cfg_min_nm
+    c = int(inst.cfg_m1[i, j, k])
+    return None if c < 0 else c
 
 
 # ---------------------------------------------------------------------------
@@ -77,41 +100,39 @@ def m1_select(inst: Instance, i: int, j: int, k: int,
 
 def m3_upgrade(st: State, i: int, j: int, k: int) -> int | None:
     """Smallest config with nm > y_jk meeting the delay SLO within budget
-    (eq. 12). Returns the config index or None."""
+    (eq. 12). Returns the config index or None.
+
+    Candidate filtering is one mask over all configs; only the re-timing
+    check walks the (nm, index)-sorted survivors, stopping at the first
+    config that keeps every routed type within its SLO."""
     inst = st.inst
     y_cur = st.y[j, k]
-    best, best_nm = None, np.inf
-    for c, (n, m) in enumerate(inst.configs):
-        nm = n * m
-        if nm <= y_cur or nm >= best_nm:
-            continue
-        if inst.B_eff[j, k] / nm > inst.C_gpu[k]:
-            continue
-        if inst.D_cfg[i, j, k, c] > inst.Delta[i]:
-            continue
-        inc_cost = inst.Delta_T * inst.p_c[k] * (nm - y_cur)
-        if st.spend + inc_cost > inst.delta:
+    nm = inst.nm
+    mask = ((nm > y_cur) & inst.mem_ok[j, k]
+            & (inst.D_cfg[i, j, k] <= inst.Delta[i])
+            & (st.spend + inst.Delta_T * inst.p_c[k] * (nm - y_cur)
+               <= inst.delta))
+    if not mask.any():
+        return None
+    c_old = int(st.cfg[j, k])
+    if c_old < 0:
+        for c in inst.cfg_by_nm:
+            if mask[c]:
+                return int(c)
+        return None
+    x_col = st.x[:, j, k]
+    routed = x_col > 1e-12
+    for c in inst.cfg_by_nm:
+        if not mask[c]:
             continue
         # Upgrading the pair's config re-times every type already routed to
         # it; require the new config to keep all of them within their SLO.
-        if st.cfg[j, k] >= 0 and not _retime_ok(st, j, k, c):
+        d_new = st.D_used + (inst.D_cfg[:, j, k, c]
+                             - inst.D_cfg[:, j, k, c_old]) * x_col
+        if np.any(d_new[routed] > inst.Delta[routed] + 1e-9):
             continue
-        best, best_nm = c, nm
-    return best
-
-
-def _retime_ok(st: State, j: int, k: int, c_new: int) -> bool:
-    inst = st.inst
-    c_old = st.cfg[j, k]
-    for i2 in range(inst.I):
-        if st.x[i2, j, k] <= 1e-12:
-            continue
-        d_new = (st.D_used[i2]
-                 + (inst.D_cfg[i2, j, k, c_new] - inst.D_cfg[i2, j, k, c_old])
-                 * st.x[i2, j, k])
-        if d_new > inst.Delta[i2] + 1e-9:
-            return False
-    return True
+        return int(c)
+    return None
 
 
 # ---------------------------------------------------------------------------
@@ -132,48 +153,50 @@ def effective_coverage(st: State, i: int, j: int, k: int, c: int) -> float:
     return float(min(st.r_rem[i], err_cap, del_cap))
 
 
-def marginal_cost(st: State, i: int, j: int, k: int, c: int) -> float:
-    """c^k_ij per eq. (10): incremental rental + storage + delay penalty."""
+def rank_keys_all(st: State, i: int, c_arr: np.ndarray
+                  ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Batched M2 keys for type i over every (model, tier) pair at once.
+
+    `c_arr[J,K]` holds the candidate config per pair (-1 where none).
+    Returns `(pi, kappa, valid)` arrays [J,K]; sorting valid candidates by
+    (pi, kappa) with a stable sort reproduces the scalar candidate scan's
+    ordering, including its j-major/k-minor tie-breaking."""
     inst = st.inst
-    nm = inst.nm[c]
-    inc_gpus = max(0.0, nm - st.y[j, k])
-    data_gb = inst.theta[i] / KB_PER_GB * inst.r[i] * inst.lam[i]
-    return (inst.Delta_T * (inst.p_c[k] * inc_gpus
-                            + inst.p_s * (inst.B[j] + data_gb))
-            + inst.rho[i] * inst.D_cfg[i, j, k, c] * 1e3)
-
-
-def rank_key(st: State, i: int, j: int, k: int, c: int) -> tuple[int, float]:
-    """M2 lexicographic key (pi, kappa)."""
-    xbar = effective_coverage(st, i, j, k, c)
-    if xbar <= 1e-9:
-        return (2, np.inf)
+    cc = np.maximum(c_arr, 0)
+    d = np.take_along_axis(inst.D_cfg[i], cc[:, :, None], axis=2)[:, :, 0]
+    e = inst.e_bar[i]
+    r_rem = float(st.r_rem[i])
+    err_cap = (inst.eps[i] - st.E_used[i]) / np.maximum(e, 1e-12)
+    del_cap = (inst.Delta[i] - st.D_used[i]) / np.maximum(d, 1e-12)
+    if "no_m3" in st.ablation:
+        del_cap = np.full_like(d, r_rem)
+    xbar = np.minimum(np.minimum(r_rem, err_cap), del_cap)
+    inc_gpus = np.maximum(0.0, inst.nm[cc] - st.y)
+    cost = (inst.Delta_T * (inst.p_c[None, :] * inc_gpus
+                            + inst.p_s * (inst.B[:, None] + inst.data_gb[i]))
+            + inst.rho[i] * d * 1e3)
+    live = xbar > 1e-9
+    valid = (c_arr >= 0) & live
     if "no_m2" in st.ablation:
         # Raw-cost ranking, no effective-coverage normalization, no
         # full-coverage tie-breaker (paper Table 3: ~+50% cost).
-        return (0, marginal_cost(st, i, j, k, c))
-    pi = int(xbar < st.r_rem[i] - 1e-9)
-    kappa = marginal_cost(st, i, j, k, c) / xbar
-    return (pi, kappa)
+        pi = np.zeros(c_arr.shape, dtype=np.int64)
+        kappa = cost
+    else:
+        pi = (xbar < r_rem - 1e-9).astype(np.int64)
+        kappa = np.divide(cost, xbar, out=np.full_like(cost, np.inf),
+                          where=live)
+    return pi, kappa, valid
 
 
 # ---------------------------------------------------------------------------
 # Commit machinery (GH Phase-2 Step 4): verify (8f)-(8h) + budget, commit.
 # ---------------------------------------------------------------------------
 
-def _kv_tokens(st: State, j: int, k: int, extra_i: int | None = None,
-               extra_x: float = 0.0) -> float:
-    inst = st.inst
-    t = float(np.sum(inst.r * inst.T_res[:, j, k] * st.x[:, j, k]))
-    if extra_i is not None:
-        t += inst.r[extra_i] * inst.T_res[extra_i, j, k] * extra_x
-    return t
-
-
 def max_commit(st: State, i: int, j: int, k: int, c: int) -> float:
     """Largest additional fraction of type-i traffic committable to (j,k)
     at config c without violating (8f) memory, (8g) compute, (8h) storage,
-    or the budget (8c)."""
+    or the budget (8c).  O(1): reads the State's incremental aggregates."""
     inst = st.inst
     nm = float(inst.nm[c])
     cap = effective_coverage(st, i, j, k, c)
@@ -182,9 +205,8 @@ def max_commit(st: State, i: int, j: int, k: int, c: int) -> float:
         pass  # ablated: commit blindly past the memory budget
     elif inst.kv_applicable[j]:
         head_gb = inst.C_gpu[k] - inst.B_eff[j, k] / nm \
-            - (inst.beta[j] / KB_PER_GB) / nm * _kv_tokens(st, j, k)
-        per_x = (inst.beta[j] / KB_PER_GB) / nm \
-            * inst.r[i] * inst.T_res[i, j, k]
+            - (inst.beta[j] / KB_PER_GB) / nm * st.kv_tok[j, k]
+        per_x = (inst.beta[j] / KB_PER_GB) / nm * inst.kv_tok_per_x[i, j, k]
         if per_x > 1e-18:
             cap = min(cap, head_gb / per_x)
         elif head_gb < 0:
@@ -193,26 +215,20 @@ def max_commit(st: State, i: int, j: int, k: int, c: int) -> float:
         if inst.C_gpu[k] - inst.B_eff[j, k] / nm < 0:
             return 0.0
     # (8g): compute headroom of the y GPUs this config provides.
-    load = float(np.sum(inst.alpha[:, j, k] * inst.r * inst.lam / 1e3
-                        * st.x[:, j, k]))
     comp_cap = inst.eta * 3600.0 * inst.P_gpu[k] * nm
-    per_x = inst.alpha[i, j, k] * inst.r[i] * inst.lam[i] / 1e3
+    per_x = inst.load_per_x[i, j, k]
     if per_x > 1e-18:
-        cap = min(cap, (comp_cap - load) / per_x)
+        cap = min(cap, (comp_cap - st.load[j, k]) / per_x)
     # (8h): storage headroom for type i.
-    stor_used = float(np.sum(inst.B[None, :, None] * st.z[i])
-                      + np.sum(inst.theta[i] / KB_PER_GB * inst.r[i]
-                               * inst.lam[i] * st.x[i]))
     new_weight = inst.B[j] if st.z[i, j, k] < 0.5 else 0.0
-    per_x = inst.theta[i] / KB_PER_GB * inst.r[i] * inst.lam[i]
+    per_x = inst.data_gb[i]
     if per_x > 1e-18:
-        cap = min(cap, (inst.C_s - stor_used - new_weight) / per_x)
+        cap = min(cap, (inst.C_s - st.stor_used[i] - new_weight) / per_x)
     # budget (8c): incremental rental + data storage per unit x.
     inc_gpus = max(0.0, inst.nm[c] - st.y[j, k])
     fixed = inst.Delta_T * (inst.p_c[k] * inc_gpus
                             + (inst.p_s * inst.B[j] if st.z[i, j, k] < 0.5 else 0.0))
-    per_x = inst.Delta_T * inst.p_s * inst.theta[i] / KB_PER_GB \
-        * inst.r[i] * inst.lam[i]
+    per_x = inst.budget_per_x[i]
     if st.spend + fixed > inst.delta:
         return 0.0
     if per_x > 1e-18:
@@ -220,21 +236,94 @@ def max_commit(st: State, i: int, j: int, k: int, c: int) -> float:
     return max(0.0, float(cap))
 
 
-def commit(st: State, i: int, j: int, k: int, c: int, frac: float) -> None:
-    """Apply an accepted assignment to the running state."""
+def max_commit_batch(st: State, i: int, c_arr: np.ndarray) -> np.ndarray:
+    """`max_commit` for type i over every (j,k) pair at once.
+
+    `c_arr[J,K]` gives the config per pair (-1 -> cap 0).  Pure in the
+    state, so one batched evaluation replaces a row of scalar calls as long
+    as no commit happens in between — used by the consolidation
+    destination scan.  Elementwise arithmetic mirrors `max_commit` exactly.
+    """
+    inst = st.inst
+    cc = np.maximum(c_arr, 0)
+    nm = inst.nm[cc].astype(float)
+    d = np.take_along_axis(inst.D_cfg[i], cc[:, :, None], axis=2)[:, :, 0]
+    err_cap = (inst.eps[i] - st.E_used[i]) / np.maximum(inst.e_bar[i], 1e-12)
+    del_cap = (inst.Delta[i] - st.D_used[i]) / np.maximum(d, 1e-12)
+    if "no_m3" in st.ablation:
+        del_cap = np.full_like(d, float(st.r_rem[i]))
+    cap = np.minimum(np.minimum(float(st.r_rem[i]), err_cap), del_cap)
+    dead = c_arr < 0
+    with np.errstate(divide="ignore", invalid="ignore"):
+        # (8f)
+        if "no_m1" not in st.ablation:
+            b_dev = inst.B_eff / nm
+            head_gb = inst.C_gpu[None, :] - b_dev \
+                - (inst.beta[:, None] / KB_PER_GB) / nm * st.kv_tok
+            per_x = (inst.beta[:, None] / KB_PER_GB) / nm \
+                * inst.kv_tok_per_x[i]
+            kv = inst.kv_applicable[:, None]
+            has_px = per_x > 1e-18
+            cap = np.where(kv & has_px,
+                           np.minimum(cap, head_gb / np.where(has_px, per_x, 1.0)),
+                           cap)
+            dead |= kv & ~has_px & (head_gb < 0)
+            dead |= ~kv & (inst.C_gpu[None, :] - b_dev < 0)
+        # (8g)
+        comp_cap = inst.eta * 3600.0 * inst.P_gpu[None, :] * nm
+        per_x = inst.load_per_x[i]
+        has_px = per_x > 1e-18
+        cap = np.where(has_px,
+                       np.minimum(cap, (comp_cap - st.load)
+                                  / np.where(has_px, per_x, 1.0)),
+                       cap)
+        # (8h)
+        new_weight = np.where(st.z[i] < 0.5, inst.B[:, None], 0.0)
+        if inst.data_gb[i] > 1e-18:
+            cap = np.minimum(cap, (inst.C_s - st.stor_used[i] - new_weight)
+                             / inst.data_gb[i])
+        # budget (8c)
+        inc_gpus = np.maximum(0.0, inst.nm[cc] - st.y)
+        fixed = inst.Delta_T * (inst.p_c[None, :] * inc_gpus
+                                + np.where(st.z[i] < 0.5,
+                                           inst.p_s * inst.B[:, None], 0.0))
+        dead |= st.spend + fixed > inst.delta
+        if inst.budget_per_x[i] > 1e-18:
+            cap = np.minimum(cap, (inst.delta - st.spend - fixed)
+                             / inst.budget_per_x[i])
+    return np.where(dead, 0.0, np.maximum(0.0, cap))
+
+
+def commit(st: State, i: int, j: int, k: int, c: int, frac: float,
+           undo: list | None = None) -> None:
+    """Apply an accepted assignment to the running state, maintaining every
+    incremental aggregate.  When `undo` is given, push a record that
+    `undo_all` restores exactly (bitwise)."""
     inst = st.inst
     if frac <= 0:
         return
+    c_old = int(st.cfg[j, k])
+    retime = c_old >= 0 and c_old != c
+    if undo is not None:
+        undo.append((
+            "commit", i, j, k,
+            float(st.x[i, j, k]), float(st.z[i, j, k]), float(st.q[j, k]),
+            c_old, float(st.y[j, k]), float(st.r_rem[i]),
+            float(st.E_used[i]), float(st.D_used[i]), st.spend,
+            float(st.kv_tok[j, k]), float(st.load[j, k]),
+            float(st.stor_used[i]),
+            st.D_used.copy() if retime else None,
+            i in st.uncovered))
     nm = int(inst.nm[c])
     inc_gpus = max(0, nm - int(st.y[j, k]))
     new_adm = st.z[i, j, k] < 0.5
-    # Config change re-times previously routed traffic on this pair.
-    c_old = int(st.cfg[j, k])
-    if c_old >= 0 and c_old != c:
-        for i2 in range(inst.I):
-            if st.x[i2, j, k] > 1e-12:
-                st.D_used[i2] += (inst.D_cfg[i2, j, k, c]
-                                  - inst.D_cfg[i2, j, k, c_old]) * st.x[i2, j, k]
+    if retime:
+        # Config change re-times previously routed traffic on this pair.
+        x_col = st.x[:, j, k]
+        st.D_used += np.where(
+            x_col > 1e-12,
+            (inst.D_cfg[:, j, k, c] - inst.D_cfg[:, j, k, c_old]) * x_col,
+            0.0)
     st.x[i, j, k] += frac
     st.z[i, j, k] = 1.0
     st.q[j, k] = 1.0
@@ -243,8 +332,167 @@ def commit(st: State, i: int, j: int, k: int, c: int, frac: float) -> None:
     st.r_rem[i] = max(0.0, st.r_rem[i] - frac)
     st.E_used[i] += inst.e_bar[i, j, k] * frac
     st.D_used[i] += inst.D_cfg[i, j, k, c] * frac
+    st.kv_tok[j, k] += inst.kv_tok_per_x[i, j, k] * frac
+    st.load[j, k] += inst.load_per_x[i, j, k] * frac
+    st.stor_used[i] += (inst.B[j] if new_adm else 0.0) + inst.data_gb[i] * frac
     st.spend += inst.Delta_T * (
         inst.p_c[k] * inc_gpus
         + (inst.p_s * inst.B[j] if new_adm else 0.0)
-        + inst.p_s * inst.theta[i] / KB_PER_GB * inst.r[i] * inst.lam[i] * frac)
+        + inst.p_s * inst.data_gb[i] * frac)
     st.uncovered.discard(i)
+
+
+def remove_assignment(st: State, i: int, j: int, k: int,
+                      undo: list | None = None, timed: bool = True,
+                      auto_deactivate: bool = True) -> float:
+    """Inverse delta of `commit`: take type i entirely off pair (j,k).
+
+    Zeroes x/z for the cell and rolls every aggregate back by the removed
+    fraction.  With `auto_deactivate`, a pair left without traffic is shut
+    down (y/q/cfg cleared, all admissions on it dropped) — the relocate
+    move's source-side semantics.  `timed=False` skips the D_used
+    subtraction for pairs whose delay contribution was already suspended
+    (consolidation).  Returns the removed fraction."""
+    inst = st.inst
+    frac = float(st.x[i, j, k])
+    had_z = st.z[i, j, k] > 0.5
+    c_jk = int(st.cfg[j, k])
+    st.x[i, j, k] = 0.0
+    deact = auto_deactivate and float(st.x[:, j, k].sum()) <= 1e-12
+    if undo is not None:
+        undo.append((
+            "remove", i, j, k, frac, had_z, deact, c_jk,
+            float(st.q[j, k]), float(st.y[j, k]),
+            float(st.r_rem[i]), float(st.E_used[i]), float(st.D_used[i]),
+            st.spend, float(st.kv_tok[j, k]), float(st.load[j, k]),
+            st.stor_used.copy() if deact else float(st.stor_used[i]),
+            st.z[:, j, k].copy() if deact else None))
+    st.z[i, j, k] = 0.0
+    st.r_rem[i] = st.r_rem[i] + frac
+    st.E_used[i] -= inst.e_bar[i, j, k] * frac
+    if timed and c_jk >= 0:
+        st.D_used[i] -= inst.D_cfg[i, j, k, c_jk] * frac
+    st.kv_tok[j, k] -= inst.kv_tok_per_x[i, j, k] * frac
+    st.load[j, k] -= inst.load_per_x[i, j, k] * frac
+    data = inst.data_gb[i] * frac
+    weight = inst.B[j] if had_z else 0.0
+    st.stor_used[i] -= data + weight
+    st.spend -= inst.Delta_T * inst.p_s * (data + weight)
+    if deact:
+        deactivate_pair(st, j, k)
+    return frac
+
+
+def deactivate_pair(st: State, j: int, k: int) -> None:
+    """Shut pair (j,k) down: drop every remaining admission on it (model
+    storage spend + per-type storage), refund the rental, clear y/q/cfg.
+    Callers own the rollback (undo record or snapshot)."""
+    inst = st.inst
+    others = st.z[:, j, k] > 0.5
+    n_other = int(np.count_nonzero(others))
+    if n_other:
+        st.spend -= inst.Delta_T * inst.p_s * inst.B[j] * n_other
+        st.stor_used[others] -= inst.B[j]
+        st.z[:, j, k] = 0.0
+    st.spend -= inst.Delta_T * inst.p_c[k] * float(st.y[j, k])
+    st.q[j, k] = 0.0
+    st.y[j, k] = 0.0
+    st.cfg[j, k] = -1
+
+
+def undo_all(st: State, undo: list) -> None:
+    """Roll back every record pushed by `commit` / `remove_assignment`, in
+    reverse order.  Restoration is exact: each record carries the previous
+    raw values, so the state is bitwise-identical to before the moves."""
+    while undo:
+        rec = undo.pop()
+        if rec[0] == "commit":
+            (_, i, j, k, x0, z0, q0, cfg0, y0, rr0, e0, d0, sp0,
+             kv0, ld0, su0, dvec, unc_had) = rec
+            st.x[i, j, k] = x0
+            st.z[i, j, k] = z0
+            st.q[j, k] = q0
+            st.cfg[j, k] = cfg0
+            st.y[j, k] = y0
+            st.r_rem[i] = rr0
+            st.E_used[i] = e0
+            if dvec is not None:
+                st.D_used[:] = dvec
+            else:
+                st.D_used[i] = d0
+            st.spend = sp0
+            st.kv_tok[j, k] = kv0
+            st.load[j, k] = ld0
+            st.stor_used[i] = su0
+            if unc_had:
+                st.uncovered.add(i)
+        else:
+            (_, i, j, k, frac, had_z, deact, cfg0, q0, y0,
+             rr0, e0, d0, sp0, kv0, ld0, su0, zcol) = rec
+            st.x[i, j, k] = frac
+            st.q[j, k] = q0
+            st.y[j, k] = y0
+            st.cfg[j, k] = cfg0
+            st.r_rem[i] = rr0
+            st.E_used[i] = e0
+            st.D_used[i] = d0
+            st.spend = sp0
+            st.kv_tok[j, k] = kv0
+            st.load[j, k] = ld0
+            if deact:
+                st.stor_used[:] = su0
+                st.z[:, j, k] = zcol
+            else:
+                st.stor_used[i] = su0
+                st.z[i, j, k] = 1.0 if had_z else 0.0
+
+
+# ---------------------------------------------------------------------------
+# State-level objective / snapshots (AGH local search support)
+# ---------------------------------------------------------------------------
+
+def state_objective(st: State) -> float:
+    """Objective (8a) straight from the running state: spend already holds
+    rental + model storage + data storage; D_used is exactly proc_delay and
+    clip(r_rem) is the unmet fraction.  O(I) — no einsum over [I,J,K,C]."""
+    inst = st.inst
+    unmet = np.clip(st.r_rem, 0.0, None)
+    return float(st.spend + np.dot(inst.rho, st.D_used) * 1e3
+                 + inst.Delta_T * np.dot(inst.phi, unmet))
+
+
+def state_snapshot(st: State) -> tuple:
+    """Deep copy of every mutable field (multi-step rollback)."""
+    return (st.x.copy(), st.y.copy(), st.q.copy(), st.cfg.copy(),
+            st.z.copy(), st.r_rem.copy(), st.E_used.copy(), st.D_used.copy(),
+            st.spend, set(st.uncovered), st.kv_tok.copy(), st.load.copy(),
+            st.stor_used.copy())
+
+
+def state_restore(st: State, snap: tuple) -> None:
+    (x, y, q, cfg, z, r_rem, E, D, spend, unc, kv, load, stor) = snap
+    st.x[:] = x
+    st.y[:] = y
+    st.q[:] = q
+    st.cfg[:] = cfg
+    st.z[:] = z
+    st.r_rem[:] = r_rem
+    st.E_used[:] = E
+    st.D_used[:] = D
+    st.spend = spend
+    st.uncovered = set(unc)
+    st.kv_tok[:] = kv
+    st.load[:] = load
+    st.stor_used[:] = stor
+
+
+def solution_from_state(inst: Instance, st: State):
+    """Materialize a `Solution` from the running state (shared by GH/AGH)."""
+    from .solution import Solution
+
+    sol = Solution.empty(inst)
+    sol.x, sol.y, sol.q, sol.z = st.x, st.y, st.q, st.z
+    sol.u = np.clip(st.r_rem, 0.0, None)
+    jj, kk = np.nonzero((st.q > 0.5) & (st.cfg >= 0))
+    sol.w[jj, kk, st.cfg[jj, kk]] = 1.0
+    return sol

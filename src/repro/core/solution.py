@@ -112,17 +112,24 @@ def feasibility(inst: Instance, sol: Solution, tol: float = 1e-6,
     # (8d)-(8e) configuration consistency
     v["config_sum"] = float(np.max(np.abs(sol.w.sum(axis=2) - sol.q)))
     v["y_eq_nm"] = float(np.max(np.abs(sol.y - np.einsum("jkc,c->jk", sol.w, inst.nm))))
-    # (8f) per-device memory
+    # (8f) per-device memory — one vectorized pass: inactive pairs count
+    # any routed traffic as a "ghost routing" violation, active pairs check
+    # weights + resident KV (or the constant SSM state) per device.
+    active = sol.q > 0.5
     worst = 0.0
-    for j in range(J):
-        for k in range(K):
-            if sol.q[j, k] < 0.5:
-                worst = max(worst, float(np.sum(sol.x[:, j, k])))  # ghost routing
-                continue
-            n, m = sol.config_of(inst, j, k)
-            nm = n * m
-            used = inst.B_eff[j, k] / nm + kv_gb_per_device(inst, sol, j, k, nm)
-            worst = max(worst, used - inst.C_gpu[k])
+    if (~active).any():
+        worst = float(np.max(np.where(~active, sol.x.sum(axis=0), 0.0)))
+    if active.any():
+        nm_sel = np.einsum("jkc,c->jk", sol.w, inst.nm)
+        nm_safe = np.maximum(nm_sel, 1.0)
+        tokens = np.einsum("i,ijk,ijk->jk", inst.r, inst.T_res, sol.x)
+        kv_gb = np.where(
+            inst.kv_applicable[:, None],
+            (inst.beta[:, None] / KB_PER_GB) / nm_safe * tokens,
+            (inst.beta[:, None] / KB_PER_GB) * 64.0 / nm_safe)
+        used = inst.B_eff / nm_safe + kv_gb
+        worst = max(worst, float(np.max(
+            np.where(active, used - inst.C_gpu[None, :], -np.inf))))
     v["memory"] = max(0.0, worst)
     # (8g) compute throughput
     load = np.einsum("ijk,ijk->jk", inst.alpha * (inst.r * inst.lam)[:, None, None] / 1e3,

@@ -18,6 +18,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax < 0.5 ships the TPU compiler params under the old TPU-prefixed name.
+_CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or pltpu.TPUCompilerParams
+
 
 def _kernel(r_ref, k_ref, v_ref, lw_ref, u_ref, y_ref, s_ref, *, chunk: int):
     ic = pl.program_id(2)
@@ -75,7 +79,7 @@ def rwkv6_wkv(r: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
         out_specs=spec,
         out_shape=jax.ShapeDtypeStruct((B, T, H, hd), r.dtype),
         scratch_shapes=[pltpu.VMEM((hd, hd), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(r, k, v, lw, u)

@@ -18,6 +18,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax < 0.5 ships the TPU compiler params under the old TPU-prefixed name.
+_CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or pltpu.TPUCompilerParams
+
 
 def _kernel(x_ref, b_ref, c_ref, dt_ref, a_ref, d_ref, y_ref, s_ref,
             *, n_chunks: int, chunk: int):
@@ -82,7 +86,7 @@ def ssm_scan(x: jnp.ndarray, Bm: jnp.ndarray, Cm: jnp.ndarray,
         out_specs=pl.BlockSpec((1, ch, 1, hp), lambda b, h, ic: (b, ic, h, 0)),
         out_shape=jax.ShapeDtypeStruct((B, T, nh, hp), x.dtype),
         scratch_shapes=[pltpu.VMEM((hp, N), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(x, Bm, Cm, dt, A.astype(jnp.float32), D.astype(jnp.float32))

@@ -1,0 +1,127 @@
+"""Move-semantics properties of the delta-evaluation engine.
+
+For random relocate-style moves (remove a committed (i,j,k) fraction, land
+it on another pair) the incremental path must agree with a from-scratch
+recomputation:
+
+  * `state_objective` after the move  ==  `objective()` on the materialized
+    solution (tolerance 1e-9);
+  * the State's incremental aggregates == einsum recomputation from x/z;
+  * a move accepted by `max_commit`/`commit` leaves a solution that passes
+    the full `feasibility()` system;
+  * `undo_all` restores every field of the State exactly (bitwise).
+"""
+import numpy as np
+import pytest
+
+from repro.core import (default_instance, greedy_heuristic, is_feasible,
+                        objective, random_instance)
+from repro.core.mechanisms import (State, commit, max_commit,
+                                   remove_assignment, solution_from_state,
+                                   state_objective, state_restore,
+                                   state_snapshot, undo_all)
+
+RTOL = 1e-9
+
+
+def _states():
+    out = []
+    for name, inst in [("default", default_instance()),
+                       ("random-8-6-8", random_instance(8, 6, 8, seed=5)),
+                       ("random-10-10-10", random_instance(10, 10, 10, seed=3))]:
+        _, st = greedy_heuristic(inst)
+        out.append((name, st))
+    return out
+
+
+def _check_aggregates(st):
+    inst = st.inst
+    kv = np.einsum("ijk,ijk->jk", inst.kv_tok_per_x, st.x)
+    load = np.einsum("ijk,ijk->jk", inst.load_per_x, st.x)
+    stor = (np.sum(inst.B[None, :, None] * st.z, axis=(1, 2))
+            + inst.data_gb * st.x.sum(axis=(1, 2)))
+    np.testing.assert_allclose(st.kv_tok, kv, atol=1e-6, rtol=RTOL)
+    np.testing.assert_allclose(st.load, load, atol=1e-6, rtol=RTOL)
+    np.testing.assert_allclose(st.stor_used, stor, atol=1e-6, rtol=RTOL)
+
+
+def _fields(st):
+    return (st.x.copy(), st.y.copy(), st.q.copy(), st.cfg.copy(), st.z.copy(),
+            st.r_rem.copy(), st.E_used.copy(), st.D_used.copy(), st.spend,
+            st.kv_tok.copy(), st.load.copy(), st.stor_used.copy(),
+            set(st.uncovered))
+
+
+def _assert_exact_restore(before, st):
+    after = _fields(st)
+    names = ["x", "y", "q", "cfg", "z", "r_rem", "E_used", "D_used",
+             "spend", "kv_tok", "load", "stor_used", "uncovered"]
+    for name, a, b in zip(names, before, after):
+        if isinstance(a, np.ndarray):
+            assert np.array_equal(a, b), f"{name} not restored exactly"
+        else:
+            assert a == b, f"{name} not restored exactly"
+
+
+@pytest.mark.parametrize("name,st", _states())
+def test_random_moves_match_from_scratch(name, st):
+    inst = st.inst
+    rng = np.random.default_rng(0)
+    assigned = np.argwhere(st.x > 1e-9)
+    n_checked = 0
+    for _ in range(200):
+        i, j, k = (int(v) for v in assigned[rng.integers(len(assigned))])
+        j2, k2 = int(rng.integers(inst.J)), int(rng.integers(inst.K))
+        if (j2, k2) == (j, k):
+            continue
+        before = _fields(st)
+        undo = []
+        frac = remove_assignment(st, i, j, k, undo=undo)
+        # Delta removal must agree with a from-scratch evaluation.
+        assert abs(state_objective(st)
+                   - objective(inst, solution_from_state(inst, st))) \
+            <= RTOL * max(1.0, state_objective(st))
+        c = int(st.cfg[j2, k2]) if st.q[j2, k2] > 0.5 \
+            else int(inst.cfg_m1[i, j2, k2])
+        landed = False
+        if c >= 0 and inst.D_cfg[i, j2, k2, c] <= inst.Delta[i] \
+                and max_commit(st, i, j2, k2, c) >= frac - 1e-9:
+            commit(st, i, j2, k2, c, frac, undo=undo)
+            landed = True
+            sol = solution_from_state(inst, st)
+            # O(1)-maintained objective == full eq. (8a) recomputation.
+            assert abs(state_objective(st) - objective(inst, sol)) \
+                <= RTOL * max(1.0, abs(objective(inst, sol)))
+            # Every accepted move keeps the full constraint system happy.
+            assert is_feasible(inst, sol, enforce_zeta=False)
+            _check_aggregates(st)
+            n_checked += 1
+        undo_all(st, undo)
+        _assert_exact_restore(before, st)
+        del landed
+    assert n_checked >= 5, f"too few landable moves exercised ({n_checked})"
+
+
+@pytest.mark.parametrize("name,st", _states())
+def test_snapshot_restore_is_exact(name, st):
+    inst = st.inst
+    before = _fields(st)
+    snap = state_snapshot(st)
+    rng = np.random.default_rng(1)
+    assigned = np.argwhere(st.x > 1e-9)
+    # Scramble the state with a handful of irreversible-looking edits.
+    for _ in range(5):
+        i, j, k = (int(v) for v in assigned[rng.integers(len(assigned))])
+        remove_assignment(st, i, j, k)
+    state_restore(st, snap)
+    _assert_exact_restore(before, st)
+
+
+def test_construction_aggregates_match_from_scratch():
+    """After a full GH construction the incremental aggregates must equal
+    their einsum definitions (the invariant `commit` promises)."""
+    for _, st in _states():
+        _check_aggregates(st)
+        sol = solution_from_state(st.inst, st)
+        assert abs(state_objective(st) - objective(st.inst, sol)) \
+            <= RTOL * max(1.0, abs(objective(st.inst, sol)))

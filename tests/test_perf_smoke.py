@@ -1,0 +1,26 @@
+"""Perf smoke: the paper's sub-second claim must not silently regress.
+
+The seed's pure-Python AGH took ~7.9 s on the (20,20,20) Table-6 instance;
+the vectorized engine runs it in ~0.1 s.  The bound here is deliberately
+generous (2 s) so the test only fires on an order-of-magnitude regression,
+not on machine noise.  Kept fast enough to run in every tier-1 pass."""
+import time
+
+from repro.core import agh, gh, random_instance
+
+
+def test_gh_subsecond_at_paper_scale():
+    inst = random_instance(20, 20, 20, seed=0)
+    t0 = time.perf_counter()
+    gh(inst)
+    assert time.perf_counter() - t0 < 0.5
+
+
+def test_agh_subsecond_at_paper_scale():
+    inst = random_instance(20, 20, 20, seed=0)
+    t0 = time.perf_counter()
+    sol = agh(inst)
+    wall = time.perf_counter() - t0
+    assert wall < 2.0, f"AGH took {wall:.2f}s on (20,20,20) — vectorized " \
+        "engine regressed by an order of magnitude"
+    assert sol.u.max() <= 1.0 + 1e-9

@@ -2,6 +2,9 @@
 for ANY randomly generated instance, GH/AGH output must satisfy the
 coupled constraint system they claim to preserve."""
 import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (agh, feasibility, gh, is_feasible, objective,

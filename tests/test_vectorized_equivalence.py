@@ -1,0 +1,124 @@
+"""Equivalence of the vectorized allocation engine and the scalar seed path.
+
+The acceptance bar for the vectorized engine (precomputed M1 tables, batched
+M2 ranking, incremental State aggregates, delta-move local search) is
+behavioral: on the seeded suite it must return the same solutions as the
+frozen scalar reference in `repro.core._scalar_ref` — same active pairs and
+configs, routing and objective within 1e-9.  In practice the two paths are
+bit-identical on every instance below; the tolerances only allow for float
+re-association in the incremental aggregates.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (agh, default_instance, gh, greedy_heuristic,
+                        is_feasible, objective, random_instance)
+from repro.core import _scalar_ref as ref
+from repro.core.mechanisms import m1_select, m3_upgrade, max_commit_batch
+
+
+def _instances():
+    return [
+        ("default", default_instance()),
+        ("random-6-6-10", random_instance(6, 6, 10, seed=1)),
+        ("random-8-5-6", random_instance(8, 5, 6, seed=2)),
+        ("random-10-10-10", random_instance(10, 10, 10, seed=3)),
+        ("stressed-1.15", default_instance().stressed(1.15)),
+        ("stressed-1.3", default_instance().stressed(1.3)),
+        ("tight-budget", random_instance(6, 6, 10, seed=4, budget=40.0)),
+    ]
+
+
+def _assert_same_solution(inst, a, b, label):
+    assert np.array_equal(a.q, b.q), f"{label}: active pairs differ"
+    assert np.array_equal(a.w, b.w), f"{label}: configs differ"
+    assert np.allclose(a.y, b.y, atol=0), f"{label}: GPU counts differ"
+    assert np.allclose(a.x, b.x, atol=1e-9), f"{label}: routing differs"
+    assert np.allclose(a.u, b.u, atol=1e-9), f"{label}: unmet differs"
+    oa, ob = objective(inst, a), objective(inst, b)
+    assert abs(oa - ob) <= 1e-9 * max(1.0, abs(ob)), (label, oa, ob)
+
+
+@pytest.mark.parametrize("name,inst", _instances())
+def test_m1_table_matches_scalar_scan(name, inst):
+    """cfg_m1 must reproduce the scalar config scan cell-for-cell."""
+    for i in range(inst.I):
+        for j in range(inst.J):
+            for k in range(inst.K):
+                want = ref.m1_select_ref(inst, i, j, k)
+                got = m1_select(inst, i, j, k)
+                assert got == want, (name, i, j, k, got, want)
+
+
+@pytest.mark.parametrize("name,inst", _instances())
+def test_gh_matches_scalar_reference(name, inst):
+    sol_ref, _ = ref.gh_scalar(inst)
+    sol_vec = gh(inst)
+    _assert_same_solution(inst, sol_vec, sol_ref, f"GH/{name}")
+    assert is_feasible(inst, sol_vec, enforce_zeta=False)
+
+
+@pytest.mark.parametrize("name,inst", _instances()[:4])
+def test_gh_matches_scalar_reference_alt_orderings(name, inst):
+    for order in (np.arange(inst.I), np.arange(inst.I)[::-1],
+                  np.argsort(inst.phi)):
+        sol_ref, _ = ref.gh_scalar(inst, order=order)
+        sol_vec, _ = greedy_heuristic(inst, order=order)
+        _assert_same_solution(inst, sol_vec, sol_ref,
+                              f"GH/{name}/order={order[:3]}...")
+
+
+@pytest.mark.parametrize("ablation", [frozenset({"no_m1"}),
+                                      frozenset({"no_m2"}),
+                                      frozenset({"no_m3"})])
+def test_gh_ablations_match_scalar_reference(ablation):
+    inst = default_instance()
+    sol_ref, _ = ref.gh_scalar(inst, ablation=ablation)
+    sol_vec, _ = greedy_heuristic(inst, ablation=ablation)
+    _assert_same_solution(inst, sol_vec, sol_ref, f"GH/{set(ablation)}")
+
+
+@pytest.mark.parametrize("name,inst", [
+    ("default", default_instance()),
+    ("random-5-4-6", random_instance(5, 4, 6, seed=2)),
+    ("random-6-6-10", random_instance(6, 6, 10, seed=1)),
+    ("stressed-1.15", default_instance().stressed(1.15)),
+])
+def test_agh_matches_scalar_reference(name, inst):
+    """Full AGH pipeline (multi-start + relocate + consolidate): the
+    delta-move engine must land on the scalar reference's solution."""
+    sol_ref = ref.agh_scalar(inst)
+    sol_vec = agh(inst, validate=True)
+    _assert_same_solution(inst, sol_vec, sol_ref, f"AGH/{name}")
+    assert is_feasible(inst, sol_vec, enforce_zeta=False)
+
+
+@pytest.mark.parametrize("name,inst", _instances()[:4])
+def test_max_commit_batch_matches_scalar_reference(name, inst):
+    """Batched (8c)-(8h) caps equal the scalar from-scratch computation on
+    mid-construction states, cell for cell."""
+    _, st = greedy_heuristic(inst)
+    for i in range(inst.I):
+        c_arr = np.where(st.q > 0.5, st.cfg, inst.cfg_m1[i])
+        caps = max_commit_batch(st, i, c_arr)
+        for j in range(inst.J):
+            for k in range(inst.K):
+                c = int(c_arr[j, k])
+                if c < 0:
+                    assert caps[j, k] == 0.0
+                    continue
+                want = ref.max_commit_ref(st, i, j, k, c)
+                assert abs(caps[j, k] - want) <= 1e-9 * max(1.0, want), \
+                    (name, i, j, k, caps[j, k], want)
+
+
+def test_m3_upgrade_matches_scalar_reference():
+    """M3 decisions agree on states reached during construction."""
+    inst = default_instance()
+    _, st = greedy_heuristic(inst)
+    for i in range(inst.I):
+        for j in range(inst.J):
+            for k in range(inst.K):
+                if st.q[j, k] <= 0.5:
+                    continue
+                assert m3_upgrade(st, i, j, k) == ref.m3_upgrade_ref(st, i, j, k)
