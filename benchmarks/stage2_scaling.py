@@ -1,0 +1,84 @@
+"""Stage-2 / rolling evaluation scaling: before/after rows for the
+pattern-reuse LP engine (PR 2).
+
+"Before" is the frozen seed protocol — one `Instance.perturbed` rebuild plus
+one from-scratch dict-of-tuples LP assembly (`_scalar_ref.stage2_lp_ref`)
+per scenario; "after" is the batched `Stage2System` path `evaluate` /
+`rolling` use now.  Emits one ``name,us_per_call`` row per (size, path) so
+evaluation-pipeline regressions show up directly in CI logs, plus rolling
+replay rows (busy day, volatile day, multi-day, 1.5x stress) on the default
+instance.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import evaluate, gh, random_instance, default_instance
+from repro.core import replay_study
+from repro.core._scalar_ref import stage2_lp_ref
+from repro.core.stage2 import stage2_cost
+
+from .common import Timer, emit
+
+SIZES = [(6, 6, 10), (10, 10, 10), (20, 20, 20)]
+
+
+def _seed_loop(inst, deploy, S: int, seed: int = 1234) -> float:
+    """The pre-PR per-scenario evaluation loop, verbatim protocol."""
+    rng = np.random.default_rng(seed)
+    costs = np.zeros(S)
+    for s in range(S):
+        scen = inst.perturbed(rng, d_infl=0.15, e_infl=0.10, lam_pm=0.20)
+        sol, _ = stage2_lp_ref(scen, deploy)
+        costs[s] = stage2_cost(scen, sol)
+    return float(costs.mean())
+
+
+def run(sizes=SIZES, S: int = 120, S_before: int = 30,
+        n_windows: int = 96, quick: bool = False) -> list[dict]:
+    if quick:
+        # Keep the smallest and the (20,20,20) acceptance size.
+        sizes, S, S_before, n_windows = [sizes[0], sizes[-1]], 40, 10, 48
+    rows = []
+    for (I, J, K) in sizes:
+        inst = random_instance(I, J, K, seed=42)
+        deploy = gh(inst)
+        size = f"({I},{J},{K})"
+        with Timer() as t:
+            _seed_loop(inst, deploy, S_before)
+        before_us = t.us / S_before            # per-scenario
+        emit(f"stage2_scaling.{size}.evaluate.before", before_us,
+             f"S={S_before};per-scenario")
+        with Timer() as t:
+            res = evaluate(inst, deploy, S=S)
+        after_us = t.us / S
+        emit(f"stage2_scaling.{size}.evaluate.after", after_us,
+             f"S={S};viol={100 * res.violation_rate:.1f}%;"
+             f"speedup={before_us / max(after_us, 1e-9):.1f}x")
+        rows.append(dict(size=size, before_us=before_us, after_us=after_us))
+
+    # Rolling replays on the default instance (static GH deployment).
+    inst = default_instance()
+    plan = gh(inst)
+    planner = lambda i, p=plan: p
+    for name, kw in [
+        ("busy", dict(days=("busy",))),
+        ("volatile", dict(days=("volatile",))),
+        ("multi-day", dict(days=("busy", "volatile"))),
+        ("stress-1.5x", dict(days=("busy",), stress=1.5)),
+    ]:
+        with Timer() as t:
+            r = replay_study(inst, planner, n_windows=n_windows, **kw)
+        emit(f"stage2_scaling.replay.{name}", t.us / r.per_window_cost.size,
+             f"windows={r.per_window_cost.size};total=${r.total_cost:.1f};"
+             f"viol={100 * r.violation_rate:.1f}%")
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--S", type=int, default=120)
+    args = ap.parse_args()
+    run(S=args.S, quick=args.quick)

@@ -6,25 +6,27 @@ from .agh import agh
 from .baselines import dvr, hf, lpr
 from .evaluate import EvalResult, evaluate
 from .gh import gh, greedy_heuristic
-from .instance import Instance, default_instance, random_instance
+from .instance import (Instance, ScenarioBatch, default_instance,
+                       random_instance)
 from .mechanisms import (State, m1_select, m3_upgrade, max_commit,
                          max_commit_batch, rank_keys_all, solution_from_state,
                          state_objective)
 from .milp import solve_milp
 from .queueing import (queueing_delay, slo_attainment_with_queueing,
                        utilization, with_queueing_margin)
-from .rolling import RollingResult, rolling, volatility_study
+from .rolling import RollingResult, replay_study, rolling, volatility_study
 from .solution import (Solution, cost_terms, feasibility, is_feasible,
                        objective, proc_delay, provisioning_cost)
-from .stage2 import stage2_cost, stage2_lp
+from .stage2 import Stage2System, stage2_cost, stage2_lp
 
 __all__ = [
     "agh", "dvr", "hf", "lpr", "EvalResult", "evaluate", "gh",
-    "greedy_heuristic", "Instance", "default_instance", "random_instance",
+    "greedy_heuristic", "Instance", "ScenarioBatch", "default_instance",
+    "random_instance",
     "State", "m1_select", "m3_upgrade", "max_commit", "max_commit_batch",
     "rank_keys_all", "solution_from_state", "state_objective",
-    "solve_milp", "RollingResult",
+    "solve_milp", "RollingResult", "replay_study",
     "rolling", "volatility_study", "Solution", "cost_terms", "feasibility",
     "is_feasible", "objective", "proc_delay", "provisioning_cost",
-    "stage2_cost", "stage2_lp",
+    "Stage2System", "stage2_cost", "stage2_lp",
 ]

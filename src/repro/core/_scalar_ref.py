@@ -481,3 +481,133 @@ def agh_scalar(inst: Instance, R: int | None = None, L: int = 3, seed: int = 0,
     assert best is not None
     best.method = "AGH-ref"
     return best
+
+
+# ---------------------------------------------------------------------------
+# Stage-2 LP (scalar assembly) — frozen PR-1-era reference
+# ---------------------------------------------------------------------------
+
+def stage2_lp_ref(inst: Instance, deploy: Solution,
+                  u_cap: np.ndarray | None = None,
+                  allow_any_deployed: bool = False):
+    """Verbatim copy of the pre-vectorization `stage2_lp`: Python
+    dict-of-tuples constraint assembly, one matrix rebuilt per call.
+    Oracle for `tests/test_stage2_equivalence.py` only."""
+    from scipy import sparse
+    from scipy.optimize import linprog
+
+    I, J, K = inst.I, inst.J, inst.K
+    if u_cap is None:
+        u_cap = inst.zeta
+    pairs = [(j, k) for j in range(J) for k in range(K) if deploy.q[j, k] > 0.5]
+    cfg = {p: int(np.argmax(deploy.w[p[0], p[1]])) for p in pairs}
+    adm = []
+    for i in range(I):
+        for (j, k) in pairs:
+            if allow_any_deployed or deploy.z[i, j, k] > 0.5:
+                adm.append((i, j, k))
+    nx = len(adm)
+    n = nx + I                                    # x's then u's
+    col_x = {t: idx for idx, t in enumerate(adm)}
+
+    def solve(cap: np.ndarray):
+        rows, cols, vals, lbs, ubs = [], [], [], [], []
+        row = 0
+
+        def add(entries, lb, ub):
+            nonlocal row
+            for cc, vv in entries:
+                rows.append(row); cols.append(cc); vals.append(vv)
+            lbs.append(lb); ubs.append(ub)
+            row += 1
+
+        # (8b)
+        for i in range(I):
+            ent = [(col_x[(i, j, k)], 1.0) for (ii, j, k) in adm if ii == i]
+            ent.append((nx + i, 1.0))
+            add(ent, 1.0, 1.0)
+        # (8f) memory per active pair (weight shard fixed; KV linear in x)
+        for (j, k) in pairs:
+            c = cfg[(j, k)]
+            nm = float(inst.nm[c])
+            if not inst.kv_applicable[j]:
+                continue
+            ent = []
+            for i in range(I):
+                if (i, j, k) in col_x:
+                    coef = (inst.beta[j] / KB_PER_GB / nm
+                            * inst.r[i] * inst.T_res[i, j, k])
+                    ent.append((col_x[(i, j, k)], coef))
+            if ent:
+                add(ent, -np.inf,
+                    inst.C_gpu[k] - inst.B_eff[j, k] / nm)
+        # (8g) compute per active pair
+        for (j, k) in pairs:
+            ent = []
+            for i in range(I):
+                if (i, j, k) in col_x:
+                    ent.append((col_x[(i, j, k)],
+                                inst.alpha[i, j, k] * inst.r[i] * inst.lam[i] / 1e3))
+            if ent:
+                add(ent, -np.inf,
+                    inst.eta * 3600.0 * inst.P_gpu[k] * float(deploy.y[j, k]))
+        # (8h) storage per type
+        for i in range(I):
+            ent = []
+            base = float(np.sum(inst.B[None, :, None] * deploy.z[i]))
+            for (ii, j, k) in adm:
+                if ii == i:
+                    ent.append((col_x[(i, j, k)],
+                                inst.theta[i] / KB_PER_GB
+                                * inst.r[i] * inst.lam[i]))
+            if ent:
+                add(ent, -np.inf, inst.C_s - base)
+        # (8i) delay
+        for i in range(I):
+            ent = []
+            for (ii, j, k) in adm:
+                if ii == i:
+                    ent.append((col_x[(i, j, k)],
+                                float(inst.D_cfg[i, j, k, cfg[(j, k)]])))
+            if ent:
+                add(ent, -np.inf, float(inst.Delta[i]))
+        # (8j) error
+        for i in range(I):
+            ent = [(col_x[(i, j, k)], float(inst.e_bar[i, j, k]))
+                   for (ii, j, k) in adm if ii == i]
+            if ent:
+                add(ent, -np.inf, float(inst.eps[i]))
+
+        A = sparse.csr_matrix((vals, (rows, cols)), shape=(row, n))
+        c_obj = np.zeros(n)
+        for (i, j, k), idx in col_x.items():
+            c_obj[idx] += (inst.Delta_T * inst.p_s * inst.theta[i] / KB_PER_GB
+                           * inst.r[i] * inst.lam[i])
+            c_obj[idx] += inst.rho[i] * 1e3 * float(
+                inst.D_cfg[i, j, k, cfg[(j, k)]])
+        for i in range(I):
+            c_obj[nx + i] = inst.Delta_T * inst.phi[i]
+        bounds = [(0.0, 1.0)] * nx + [(0.0, float(cap[i])) for i in range(I)]
+        lbs_a, ubs_a = np.array(lbs), np.array(ubs)
+        eq_mask = lbs_a == ubs_a
+        res = linprog(c_obj,
+                      A_ub=A[~eq_mask], b_ub=ubs_a[~eq_mask],
+                      A_eq=A[eq_mask], b_eq=ubs_a[eq_mask],
+                      bounds=bounds, method="highs")
+        return res
+
+    res = solve(u_cap)
+    capped_ok = res.status == 0
+    if not capped_ok:
+        res = solve(np.ones(I))
+    sol = Solution.empty(inst)
+    sol.y, sol.q, sol.w, sol.z = (deploy.y.copy(), deploy.q.copy(),
+                                  deploy.w.copy(), deploy.z.copy())
+    if res.status == 0:
+        for (i, j, k), idx in col_x.items():
+            sol.x[i, j, k] = res.x[idx]
+        sol.u = np.clip(res.x[nx:], 0.0, 1.0)
+    else:  # fully unserved fallback (deployment cannot route anything)
+        sol.u = np.ones(I)
+    sol.method = deploy.method + "+stage2"
+    return sol, capped_ok

@@ -23,8 +23,8 @@ import time
 import numpy as np
 
 from .instance import Instance
-from .mechanisms import (State, commit, m3_upgrade, max_commit, rank_keys_all,
-                         solution_from_state)
+from .mechanisms import (State, commit, m3_upgrade, max_commit,
+                         max_commit_batch, rank_keys_all, solution_from_state)
 from .solution import Solution
 
 
@@ -101,6 +101,12 @@ def _phase2(st: State, order: np.ndarray) -> None:
         # Stable lexsort by (pi, kappa) keeps j-major scan order on ties —
         # identical to the scalar path's stable tuple sort.
         idx = idx[np.lexsort((kappa.ravel()[idx], pi.ravel()[idx]))]
+        # Commit caps for the whole ranked row come from one
+        # `max_commit_batch` pass instead of a scalar call per candidate.
+        # The batch is pure in the state, so it stays valid across skipped
+        # candidates and is recomputed only after a commit mutates the
+        # state (typically 1–2 commits per type vs J·K candidates).
+        caps = None
         for flat in idx:
             if st.r_rem[i] <= 1e-9:
                 break
@@ -114,10 +120,17 @@ def _phase2(st: State, order: np.ndarray) -> None:
                     continue
             else:
                 c_use = c
-            frac = min(st.r_rem[i], max_commit(st, i, j, k, c_use))
+            if c_use == c:
+                if caps is None:
+                    caps = max_commit_batch(st, i, c_arr)
+                cap = float(caps[j, k])
+            else:   # rare post-upgrade path: the row's config is stale here
+                cap = max_commit(st, i, j, k, c_use)
+            frac = min(st.r_rem[i], cap)
             if frac <= 1e-9:
                 continue
             commit(st, i, j, k, c_use, frac)
+            caps = None
 
 
 def greedy_heuristic(inst: Instance, order: np.ndarray | None = None,

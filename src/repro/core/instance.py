@@ -234,11 +234,65 @@ class Instance:
         inst.__post_init__()
         return inst
 
+    def perturbed_batch(self, rng: np.random.Generator, S: int,
+                        d_infl: float = 0.25, e_infl: float = 0.25,
+                        lam_pm: float = 0.20) -> "ScenarioBatch":
+        """S Stage-2 scenarios as stacked parameter tensors.
+
+        Draws are taken scenario by scenario in exactly the order
+        `perturbed` uses, so with the same generator the s-th row is
+        bit-identical to the s-th sequential `perturbed` call — the batched
+        and looped evaluation protocols sample the same scenarios.
+        """
+        I, J = self.I, self.J
+        tau = np.empty((S, I))
+        e_base = np.empty((S, I, J))
+        lam = np.empty((S, I))
+        for s in range(S):
+            tau[s] = self.tau * (1.0 + rng.uniform(0.0, d_infl, I))
+            e_base[s] = self.e_base * (1.0 + rng.uniform(0.0, e_infl, (I, J)))
+            lam[s] = self.lam * (1.0 + rng.uniform(-lam_pm, lam_pm, I))
+        return ScenarioBatch(S=S, tau=tau, e_base=e_base, lam=lam)
+
     def stressed(self, alpha_mult: float) -> "Instance":
         """Uniform delay+error inflation by `alpha_mult` (Fig. 3 / Fig. 5)."""
         inst = dataclasses.replace(self)
         inst.tau = self.tau * alpha_mult
         inst.e_base = self.e_base * alpha_mult
+        inst.__post_init__()
+        return inst
+
+
+@dataclasses.dataclass
+class ScenarioBatch:
+    """Stacked realized parameters for S Stage-2 scenarios.
+
+    Only the perturbable parameters are stored ([S, ...] rows of tau,
+    e_base, lam); a `None` field means "base value in every scenario".
+    `Stage2System.solve_batch` consumes the batch directly — no per-scenario
+    `Instance` (and no `__post_init__` tensor rebuild) is ever materialized
+    on the fast path.  `materialize` builds the s-th full `Instance` for
+    cross-checking against the per-scenario reference protocol.
+    """
+    S: int
+    tau: np.ndarray | None = None       # [S, I]
+    e_base: np.ndarray | None = None    # [S, I, J]
+    lam: np.ndarray | None = None       # [S, I]
+
+    @staticmethod
+    def from_lam_path(lam_path: np.ndarray) -> "ScenarioBatch":
+        """A demand-only batch (rolling-horizon replay windows)."""
+        lam_path = np.asarray(lam_path, float)
+        return ScenarioBatch(S=lam_path.shape[0], lam=lam_path)
+
+    def materialize(self, base: Instance, s: int) -> Instance:
+        inst = dataclasses.replace(base)
+        if self.tau is not None:
+            inst.tau = self.tau[s].copy()
+        if self.e_base is not None:
+            inst.e_base = self.e_base[s].copy()
+        if self.lam is not None:
+            inst.lam = self.lam[s].copy()
         inst.__post_init__()
         return inst
 

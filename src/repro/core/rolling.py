@@ -2,25 +2,42 @@
 
 Two complementary settings:
   * synthetic geometric-random-walk volatility (Table 4);
-  * diurnal trace replay (Table 5 / Fig. 6).
+  * diurnal trace replay (Table 5 / Fig. 6), extended to multi-day,
+    volatile-day, non-288-window, and inflation-stress replays.
 
 Static variants solve Stage 1 once at t=0; the 5-minute variants re-optimize
 the deployment each window with an EWMA demand forecast and a keep-best rule
-(adopt the new plan only if it improves the forecast objective). In every
-window, the current deployment is operated through the exact Stage-2 routing
-LP with the strict per-type unmet cap u_i <= 0.02 (the stress protocol).
+(adopt the new plan only if it beats the incumbent's objective on the SAME
+current forecast).  In every window, the current deployment is operated
+through the exact Stage-2 routing LP with the strict per-type unmet cap
+u_i <= 0.02 (the stress protocol).
+
+Fast path: the EWMA forecasts are precomputed for the whole path, the
+replan schedule is resolved first (it depends only on forecasts and planner
+outputs, never on window costs), and each constant-deployment segment is
+then solved as one stacked `ScenarioBatch` through a single `Stage2System`
+— the LP pattern is rebuilt only when a replan is adopted.  `batched=False`
+keeps the per-window `stage2_lp` loop for agreement tests and the
+before/after benchmark.
+
+Window pricing (PR-2 bugfix): Stage-2 penalties are horizon-priced ($ over
+Delta_T as if the window's demand persisted all day); one window accrues
+the `window_h`-hour share.  The seed hardcoded the T=288 fraction
+(24.0/288.0), mispricing every replay with n_windows != 288 — `window_h`
+is now threaded through, so total replay cost is invariant to the window
+count for the same demand profile (pinned by tests/test_rolling.py).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable
+from typing import Callable, Sequence
 
 import numpy as np
 
-from .instance import Instance
+from .instance import Instance, ScenarioBatch
 from .solution import Solution, objective, provisioning_cost
-from .stage2 import stage2_cost, stage2_lp
-from .trace import random_walk_lambdas
+from .stage2 import Stage2System, stage2_cost, stage2_lp
+from .trace import multi_day_multipliers, random_walk_lambdas
 
 STRICT_CAP = 0.02
 
@@ -35,56 +52,86 @@ class RollingResult:
     replans: int = 0
 
 
-def _window_cost(inst_w: Instance, deploy: Solution,
-                 rental_per_window: float) -> tuple[float, int]:
-    cap = np.full(inst_w.I, STRICT_CAP)
-    sol, _ = stage2_lp(inst_w, deploy, u_cap=cap)
-    # Stage-2 penalties accrue per window: scale horizon-priced terms down.
-    op = stage2_cost(inst_w, sol) / inst_w.Delta_T * (24.0 / 288.0)
-    viol = int(np.sum(sol.u > 0.01))
-    return rental_per_window + op * inst_w.Delta_T, viol
+def _ewma_forecasts(lam_path: np.ndarray, alpha: float) -> np.ndarray:
+    """Stacked EWMA forecasts: fc[t] = a·lam[t] + (1-a)·fc[t-1], seeded at
+    lam[0] — fc[t] is the forecast available AFTER observing window t."""
+    fc = np.empty_like(lam_path)
+    prev = lam_path[0].copy()
+    for t in range(lam_path.shape[0]):
+        prev = alpha * lam_path[t] + (1.0 - alpha) * prev
+        fc[t] = prev
+    return fc
 
 
 def rolling(inst0: Instance, lam_path: np.ndarray,
             planner: Callable[[Instance], Solution],
             replan_every: int | None = None,
             forecast_ewma: float = 0.4,
-            static_forecast: str = "first") -> RollingResult:
-    """Replay `lam_path` ([T, I] arrivals). If `replan_every` is None the
+            static_forecast: str = "first",
+            window_h: float | None = None,
+            batched: bool = True) -> RollingResult:
+    """Replay `lam_path` ([T, I] arrivals).  If `replan_every` is None the
     Stage-1 plan is held fixed (static); otherwise the planner re-runs
     every `replan_every` windows on an EWMA forecast with keep-best.
     static_forecast: 'first' plans on the first window's demand (synthetic
     GRW study — the walk starts at the forecast); 'mean' plans on the
     day-average (the paper's protocol for the diurnal trace replay).
+    window_h: hours per window; defaults to 24/T (a one-day path).  Pass it
+    explicitly for multi-day replays, where T spans more than 24 h.
     """
+    lam_path = np.asarray(lam_path, float)
     T = lam_path.shape[0]
-    window_h = 24.0 / T
+    if window_h is None:
+        window_h = 24.0 / T
     lam_fc = (lam_path.mean(axis=0) if static_forecast == "mean"
               else lam_path[0])
     deploy = planner(inst0.with_lam(lam_fc))
-    best_forecast_obj = objective(inst0.with_lam(lam_fc), deploy)
-    rental_w = provisioning_cost(inst0, deploy) / inst0.Delta_T * window_h
+
+    # Resolve the replan schedule first: adoption depends only on forecasts
+    # and the keep-best comparison, never on window costs, so the path
+    # splits into constant-deployment segments [t0, t1) solvable in batch.
+    replans = 0
+    segments: list[tuple[int, int, Solution]] = []
+    if replan_every is not None:
+        fc = _ewma_forecasts(lam_path, forecast_ewma)
+        t0 = 0
+        for t in range(T):
+            if t > 0 and t % replan_every == 0:
+                inst_fc = inst0.with_lam(fc[t])
+                cand = planner(inst_fc)
+                # Keep-best: both plans scored on the SAME current forecast
+                # (the incumbent's score moves with the forecast, so it is
+                # re-evaluated here rather than carried over).
+                if objective(inst_fc, cand) < objective(inst_fc, deploy) - 1e-6:
+                    segments.append((t0, t, deploy))
+                    deploy, t0 = cand, t
+                    replans += 1
+        segments.append((t0, T, deploy))
+    else:
+        segments = [(0, T, deploy)]
 
     costs = np.zeros(T)
     viols = 0
-    replans = 0
-    forecast = lam_path[0].copy()
-    for t in range(T):
-        lam_t = lam_path[t]
-        forecast = forecast_ewma * lam_t + (1 - forecast_ewma) * forecast
-        if replan_every is not None and t > 0 and t % replan_every == 0:
-            cand = planner(inst0.with_lam(forecast))
-            cand_obj = objective(inst0.with_lam(forecast), cand)
-            incumbent_obj = objective(inst0.with_lam(forecast), deploy)
-            if cand_obj < incumbent_obj - 1e-6:     # keep-best rule
-                deploy = cand
-                rental_w = provisioning_cost(inst0, deploy) / inst0.Delta_T * window_h
-                best_forecast_obj = cand_obj
-                replans += 1
-        inst_w = inst0.with_lam(lam_t)
-        costs[t], v = _window_cost(inst_w, deploy, rental_w)
-        viols += v
-    del best_forecast_obj
+    cap = np.full(inst0.I, STRICT_CAP)
+    for (t0, t1, dep) in segments:
+        if t1 <= t0:
+            continue
+        rental_w = provisioning_cost(inst0, dep) / inst0.Delta_T * window_h
+        if batched:
+            system = Stage2System(inst0, dep)
+            batch = ScenarioBatch.from_lam_path(lam_path[t0:t1])
+            op, v, _ = system.solve_batch(batch, u_cap=cap)
+            viols += int(v.sum())
+        else:
+            op = np.zeros(t1 - t0)
+            for t in range(t0, t1):
+                inst_w = inst0.with_lam(lam_path[t])
+                sol, _ = stage2_lp(inst_w, dep, u_cap=cap)
+                op[t - t0] = stage2_cost(inst_w, sol)
+                viols += int(np.sum(sol.u > 0.01))
+        # Horizon-priced penalties accrue the window_h-hour share per
+        # window (the seed hardcoded 24/288 here — the headline bugfix).
+        costs[t0:t1] = rental_w + op * window_h
     return RollingResult(method="", mean_window_cost=float(costs.mean()),
                          total_cost=float(costs.sum()),
                          violation_rate=viols / (T * inst0.I),
@@ -103,3 +150,24 @@ def volatility_study(inst0: Instance, sigma: float, trials: int,
         res = rolling(inst0, path, planner, replan_every=replan_every)
         totals.append(res.total_cost)
     return float(np.mean(totals))
+
+
+def replay_study(inst0: Instance, planner: Callable[[Instance], Solution],
+                 days: Sequence[str] = ("busy",), n_windows: int = 288,
+                 stress: float | None = None,
+                 replan_every: int | None = None, seed: int = 7,
+                 forecast_ewma: float = 0.4) -> RollingResult:
+    """Diurnal trace replay over one or more synthetic days (§5.3 extended).
+
+    `days` concatenates per-day multiplier series ("busy"/"volatile") into a
+    multi-day path; `n_windows` is windows PER DAY (window_h stays 24/n
+    regardless of the number of days); `stress` applies a uniform
+    delay+error inflation (e.g. 1.5 for the 1.5x out-of-sample stress) to
+    the operated instance before the replay.
+    """
+    inst = inst0.stressed(stress) if stress is not None else inst0
+    mult = multi_day_multipliers(days, seed=seed, n_windows=n_windows)
+    path = np.outer(mult, inst.lam)
+    return rolling(inst, path, planner, replan_every=replan_every,
+                   forecast_ewma=forecast_ewma, static_forecast="mean",
+                   window_h=24.0 / n_windows)

@@ -37,6 +37,14 @@ class Solution:
                         self.w.copy(), self.z.copy(), self.u.copy(),
                         self.runtime_s, self.method)
 
+    def routed_copy(self) -> "Solution":
+        """Copy of this deployment with the routing cleared: y/q/w/z frozen,
+        x zeroed and u all-unmet, ready for a Stage-2 scenario LP to fill.
+        """
+        return Solution(x=np.zeros_like(self.x), y=self.y.copy(),
+                        q=self.q.copy(), w=self.w.copy(), z=self.z.copy(),
+                        u=np.ones(self.u.shape[0]), method=self.method)
+
     def config_of(self, inst: Instance, j: int, k: int) -> tuple[int, int] | None:
         c = np.argmax(self.w[j, k])
         if self.w[j, k, c] <= 0.5:

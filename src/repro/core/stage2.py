@@ -1,143 +1,320 @@
 """Stage-2 operation LP (paper §5.2): with the Stage-1 deployment
 (y, q, w, z) held fixed, re-optimize only routing x and unmet u under the
-realized (perturbed) parameters. The problem is a pure LP and is solved
-exactly with HiGHS.
+realized (perturbed) parameters.  The problem is a pure LP solved exactly
+with HiGHS.
+
+Vectorized engine (PR 2)
+------------------------
+The evaluation protocols (§5.2 Tables 2/4/5, §5.3 rolling horizon) solve
+this LP hundreds of times against the SAME frozen deployment — only the
+realized (tau, e_base, lam) differ per scenario.  The constraint *pattern*
+(admissible triples, sparsity, equality block, rhs, bounds) is therefore a
+function of the deployment alone, and every per-scenario coefficient is a
+one-factor rescale of a per-triple base array:
+
+  (8f) KV coef      kvA_t · lam_i · tau_i      (T_res ∝ lam · d_comp ∝ tau)
+  (8g) compute coef gA_t  · lam_i
+  (8h) storage coef sA_t  · lam_i
+  (8i) delay coef   dA_t  · tau_i + dB_t       (comm term is tau-free)
+  (8j) error coef   mu_k  · e_base_ij
+
+`Stage2System` assembles the COO pattern once per deployment (rhs included
+— it is scenario-invariant), keeps a CSC template whose `.data` is refreshed
+in place per scenario, and solves scenarios back-to-back through HiGHS via
+`scipy.optimize.milp` — the thin wrapper; scipy exposes no basis warm-start
+API, so structure reuse is the part of the warm start we can keep.
+`solve_batch` runs a whole `ScenarioBatch` this way, optionally fanned out
+over a process pool.  No per-scenario `Instance` (nor its [I,J,K,C] tensor
+rebuild) is materialized anywhere on this path.
+
+Equivalence with the frozen per-call assembly (`_scalar_ref.stage2_lp_ref`)
+is pinned by tests/test_stage2_equivalence.py.
 """
 from __future__ import annotations
 
+import dataclasses
+
 import numpy as np
 from scipy import sparse
-from scipy.optimize import linprog
+from scipy.optimize import Bounds, LinearConstraint, milp
 
-from .instance import Instance, KB_PER_GB
+from .instance import Instance, KB_PER_GB, T_CONV, ScenarioBatch
 from .solution import Solution, cost_terms
+
+
+@dataclasses.dataclass
+class _LPResult:
+    """Raw per-scenario solve outcome (pre-`Solution` materialization)."""
+    x: np.ndarray | None     # [nx] routing values (None if both solves failed)
+    u: np.ndarray            # [I] unmet, clipped to [0, 1]
+    cost: float              # stage-2 operation cost (storage+delay+unmet)
+    capped_ok: bool          # strict-cap LP was feasible
+    viol: int                # SLO violations: #{i : u_i > 0.01}
+
+
+class Stage2System:
+    """Fixed-structure Stage-2 routing LP for one (instance, deployment).
+
+    Build once per deployment; `solve`/`solve_batch` refresh only the
+    coefficient values from each scenario's (tau, e_base, lam).
+    """
+
+    def __init__(self, inst: Instance, deploy: Solution,
+                 allow_any_deployed: bool = False):
+        self.inst = inst
+        self.deploy = deploy
+        I = inst.I
+        self.I = I
+        n_arr = np.array([n for (n, _) in inst.configs], float)
+        m_arr = np.array([m for (_, m) in inst.configs], float)
+
+        # Active pairs, j-major / k-minor (the legacy scan order).
+        pj, pk = np.nonzero(deploy.q > 0.5)
+        P = pj.size
+        cfg_p = (deploy.w[pj, pk].argmax(axis=1) if P
+                 else np.zeros(0, dtype=int))
+        nm_p = inst.nm[cfg_p].astype(float)
+        self.pj, self.pk, self.cfg_p = pj, pk, cfg_p
+
+        # Admissible triples in legacy `adm` order: i-major, pair-minor.
+        if allow_any_deployed:
+            mask_ip = np.ones((I, P), dtype=bool)
+        else:
+            mask_ip = deploy.z[:, pj, pk] > 0.5 if P else np.zeros((I, 0), bool)
+        ti, tp = np.nonzero(mask_ip)
+        tj, tk = pj[tp], pk[tp]
+        self.ti, self.tp, self.tj, self.tk = ti, tp, tj, tk
+        nx = ti.size
+        self.nx = nx
+        self.n = nx + I
+
+        # --- per-triple base factors (scenario value = base × factor) -----
+        bw_term = inst.B[tj] * inst.nu[tk] / inst.BW[tk]   # d_comp / tau
+        r_t, f_t = inst.r[ti], inst.f[ti]
+        nm_t, n_t, m_t = nm_p[tp], n_arr[cfg_p][tp], m_arr[cfg_p][tp]
+        # (8f) applies only to KV-cache models (SSM-state models have no
+        # per-token resident KV and get no memory row, as in the seed):
+        # beta/KB/nm · r · T_res, with T_res = lam/3600 · f · d_comp.
+        sel_kv = inst.kv_applicable[tj]
+        self.kvA = (inst.beta[tj] / KB_PER_GB / nm_t * r_t
+                    * f_t / T_CONV * bw_term)[sel_kv]
+        self.gA = inst.B[tj] * inst.nu[tk] * r_t / 1e3     # alpha · r (8g)
+        self.sA = inst.theta[ti] / KB_PER_GB * r_t         # (8h) and c_x
+        self.dA = bw_term * r_t / n_t                      # D_cfg tau-part
+        self.dB = m_t * inst.d_comm[ti, tj, tk] * f_t      # D_cfg comm-part
+        self.eA = inst.mu[tk]                              # e_bar / e_base
+
+        # --- row layout (legacy order: kv, compute, storage, delay, err) --
+        pair_n = np.bincount(tp, minlength=P) if P else np.zeros(0, int)
+        pair_has = pair_n > 0
+        kv_pair = pair_has & inst.kv_applicable[pj]
+        i_n = np.bincount(ti, minlength=I)
+        i_has = i_n > 0
+        row = 0
+        kv_row = np.full(P, -1)
+        kv_row[kv_pair] = row + np.arange(kv_pair.sum())
+        row += int(kv_pair.sum())
+        g_row = np.full(P, -1)
+        g_row[pair_has] = row + np.arange(pair_has.sum())
+        row += int(pair_has.sum())
+        s_row = np.full(I, -1)
+        s_row[i_has] = row + np.arange(i_has.sum())
+        row += int(i_has.sum())
+        d_row = np.full(I, -1)
+        d_row[i_has] = row + np.arange(i_has.sum())
+        row += int(i_has.sum())
+        e_row = np.full(I, -1)
+        e_row[i_has] = row + np.arange(i_has.sum())
+        row += int(i_has.sum())
+        self.m_ub = row
+
+        self.ti_kv = ti[sel_kv]
+        t_col = np.arange(nx)
+        rows_ub = np.concatenate([
+            kv_row[tp[sel_kv]], g_row[tp], s_row[ti], d_row[ti], e_row[ti],
+        ]) if nx else np.zeros(0, int)
+        cols_ub = np.concatenate(
+            [t_col[sel_kv], t_col, t_col, t_col, t_col]) if nx else \
+            np.zeros(0, int)
+        self.nnz = rows_ub.size
+
+        # Scenario-invariant rhs, in row order.
+        b_ub = np.empty(self.m_ub)
+        b_ub[kv_row[kv_pair]] = (inst.C_gpu[pk] - inst.B_eff[pj, pk] / nm_p
+                                 )[kv_pair]
+        b_ub[g_row[pair_has]] = (inst.eta * 3600.0 * inst.P_gpu[pk]
+                                 * deploy.y[pj, pk])[pair_has]
+        stor_base = np.sum(inst.B[None, :, None] * deploy.z, axis=(1, 2))
+        b_ub[s_row[i_has]] = (inst.C_s - stor_base)[i_has]
+        b_ub[d_row[i_has]] = inst.Delta[i_has]
+        b_ub[e_row[i_has]] = inst.eps[i_has]
+
+        # One combined constraint block: the m_ub inequality rows on top of
+        # the I equality rows of (8b) (x-row sums + u = 1, scenario-
+        # invariant).  A single CSC template is built once with
+        # data = COO-entry-index so `A.data = vals[perm]` refreshes the
+        # per-scenario coefficients in place; HiGHS is then fed through
+        # `scipy.optimize.milp` (the thin wrapper — `linprog` re-validates
+        # and re-stacks A_ub/A_eq on every call, which at ~1 ms/solve would
+        # dominate these tiny LPs).
+        eq_rows = self.m_ub + np.concatenate([ti, np.arange(I)])
+        eq_cols = np.concatenate([t_col, nx + np.arange(I)])
+        all_rows = np.concatenate([rows_ub, eq_rows])
+        all_cols = np.concatenate([cols_ub, eq_cols])
+        nnz_all = all_rows.size
+        coo = sparse.coo_matrix(
+            (np.arange(nnz_all, dtype=float), (all_rows, all_cols)),
+            shape=(self.m_ub + I, self.n))
+        self.A = coo.tocsc()
+        self._perm = self.A.data.astype(np.int64)
+        self._vals = np.ones(nnz_all)          # eq tail stays 1.0 forever
+        self.A.data = self._vals[self._perm]   # drop the index template
+        self.row_lb = np.concatenate([np.full(self.m_ub, -np.inf),
+                                      np.ones(I)])
+        self.row_ub = np.concatenate([b_ub, np.ones(I)])
+
+        # Bounds template: x in [0,1]; u rows refreshed per cap.
+        self._lb = np.zeros(self.n)
+        self._ub = np.ones(self.n)
+        self.c_u = inst.Delta_T * inst.phi                  # unmet objective
+
+    # ------------------------------------------------------------------
+    def _coefficients(self, tau: np.ndarray, e_base: np.ndarray,
+                      lam: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        """(A_ub COO values, objective c) for one scenario's parameters."""
+        inst, ti = self.inst, self.ti
+        lam_t = lam[ti]
+        sx = self.sA * lam_t                               # (8h) coef
+        D_t = self.dA * tau[ti] + self.dB                  # (8i) coef
+        vals = np.concatenate([
+            self.kvA * (lam * tau)[self.ti_kv],
+            self.gA * lam_t,
+            sx,
+            D_t,
+            self.eA * e_base[ti, self.tj],
+        ]) if self.nx else np.zeros(0)
+        c = np.empty(self.n)
+        c[:self.nx] = (inst.Delta_T * inst.p_s * sx
+                       + inst.rho[ti] * 1e3 * D_t)
+        c[self.nx:] = self.c_u
+        return vals, c
+
+    def _highs(self, c: np.ndarray, cap: np.ndarray):
+        self._ub[self.nx:] = cap
+        return milp(c,
+                    constraints=LinearConstraint(self.A, self.row_lb,
+                                                 self.row_ub),
+                    bounds=Bounds(self._lb, self._ub))
+
+    def solve(self, tau: np.ndarray | None = None,
+              e_base: np.ndarray | None = None,
+              lam: np.ndarray | None = None,
+              u_cap: np.ndarray | None = None) -> _LPResult:
+        """Solve one scenario; strict cap first, relaxed (u<=1) fallback —
+        the legacy `stage2_lp` protocol."""
+        inst = self.inst
+        tau = inst.tau if tau is None else tau
+        e_base = inst.e_base if e_base is None else e_base
+        lam = inst.lam if lam is None else lam
+        cap = inst.zeta if u_cap is None else u_cap
+        vals, c = self._coefficients(tau, e_base, lam)
+        if self.nnz:
+            self._vals[:self.nnz] = vals
+            self.A.data = self._vals[self._perm]
+        res = self._highs(c, cap)
+        capped_ok = res.status == 0
+        if not capped_ok:
+            res = self._highs(c, np.ones(self.I))
+        if res.status == 0:
+            u = np.clip(res.x[self.nx:], 0.0, 1.0)
+            x = res.x[:self.nx]
+            # stage2_cost of the materialized solution: the LP objective
+            # with the clipped u (x terms are exactly c's x terms).
+            cost = float(c[:self.nx] @ x + self.c_u @ u)
+        else:   # fully unserved fallback (deployment cannot route anything)
+            x, u = None, np.ones(self.I)
+            cost = float(self.c_u @ u)
+        return _LPResult(x=x, u=u, cost=cost, capped_ok=capped_ok,
+                         viol=int(np.sum(u > 0.01)))
+
+    def solve_batch(self, batch: ScenarioBatch,
+                    u_cap: np.ndarray | None = None,
+                    workers: int | None = None
+                    ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Solve every scenario of `batch` against the fixed deployment.
+
+        Returns (costs[S], viols[S], capped_ok[S]).  With `workers`, the
+        scenario list is fanned out over a process pool (each worker reuses
+        this system's pattern; chunked to amortize pickling).
+        """
+        S = batch.S
+        if workers and workers > 1 and S >= 2 * workers:
+            import concurrent.futures as cf
+            import multiprocessing as mp
+            chunks = np.array_split(np.arange(S), workers)
+            parts = []
+            # spawn, not fork: the parent is typically multithreaded (jax,
+            # BLAS) and forking such a process can deadlock the children.
+            with cf.ProcessPoolExecutor(
+                    max_workers=workers,
+                    mp_context=mp.get_context("spawn")) as ex:
+                futs = [ex.submit(_solve_chunk, self, _batch_slice(batch, c),
+                                  u_cap) for c in chunks if c.size]
+                parts = [f.result() for f in futs]
+            costs = np.concatenate([p[0] for p in parts])
+            viols = np.concatenate([p[1] for p in parts])
+            capped = np.concatenate([p[2] for p in parts])
+            return costs, viols, capped
+        return _solve_chunk(self, batch, u_cap)
+
+    def materialize(self, r: _LPResult) -> Solution:
+        """Legacy `stage2_lp` output: deployment copy + scenario routing."""
+        sol = self.deploy.routed_copy()
+        if r.x is not None:
+            sol.x[self.ti, self.tj, self.tk] = r.x
+        sol.u = r.u.copy()
+        return sol
+
+
+def _batch_slice(batch: ScenarioBatch, idx: np.ndarray) -> ScenarioBatch:
+    pick = lambda a: None if a is None else a[idx]
+    return ScenarioBatch(S=idx.size, tau=pick(batch.tau),
+                         e_base=pick(batch.e_base), lam=pick(batch.lam))
+
+
+def _solve_chunk(system: Stage2System, batch: ScenarioBatch,
+                 u_cap: np.ndarray | None
+                 ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Sequential scenario loop over one chunk (process-pool task body)."""
+    S = batch.S
+    costs = np.zeros(S)
+    viols = np.zeros(S, dtype=np.int64)
+    capped = np.zeros(S, dtype=bool)
+    for s in range(S):
+        r = system.solve(
+            tau=None if batch.tau is None else batch.tau[s],
+            e_base=None if batch.e_base is None else batch.e_base[s],
+            lam=None if batch.lam is None else batch.lam[s],
+            u_cap=u_cap)
+        costs[s], viols[s], capped[s] = r.cost, r.viol, r.capped_ok
+    return costs, viols, capped
 
 
 def stage2_lp(inst: Instance, deploy: Solution, u_cap: np.ndarray | None = None,
               allow_any_deployed: bool = False) -> tuple[Solution, bool]:
     """Solve the Stage-2 routing LP for `inst` (realized params) given the
-    fixed deployment in `deploy`. Returns (solution, capped_feasible):
+    fixed deployment in `deploy`.  Returns (solution, capped_feasible):
     if the strict unmet cap is infeasible, re-solves with the cap relaxed
     (u <= 1) and returns capped_feasible = False.
+
+    One-shot wrapper over `Stage2System`; callers solving many scenarios
+    against the same deployment should build the system once instead.
     """
-    I, J, K = inst.I, inst.J, inst.K
-    if u_cap is None:
-        u_cap = inst.zeta
-    # Active pairs and their fixed config.
-    pairs = [(j, k) for j in range(J) for k in range(K) if deploy.q[j, k] > 0.5]
-    cfg = {p: int(np.argmax(deploy.w[p[0], p[1]])) for p in pairs}
-    # admissible (i,j,k): z fixed from Stage 1 (or any deployed pair).
-    adm = []
-    for i in range(I):
-        for (j, k) in pairs:
-            if allow_any_deployed or deploy.z[i, j, k] > 0.5:
-                adm.append((i, j, k))
-    nx = len(adm)
-    n = nx + I                                    # x's then u's
-    col_x = {t: idx for idx, t in enumerate(adm)}
-
-    def solve(cap: np.ndarray):
-        rows, cols, vals, lbs, ubs = [], [], [], [], []
-        row = 0
-
-        def add(entries, lb, ub):
-            nonlocal row
-            for cc, vv in entries:
-                rows.append(row); cols.append(cc); vals.append(vv)
-            lbs.append(lb); ubs.append(ub)
-            row += 1
-
-        # (8b)
-        for i in range(I):
-            ent = [(col_x[(i, j, k)], 1.0) for (ii, j, k) in adm if ii == i]
-            ent.append((nx + i, 1.0))
-            add(ent, 1.0, 1.0)
-        # (8f) memory per active pair (weight shard fixed; KV linear in x)
-        for (j, k) in pairs:
-            c = cfg[(j, k)]
-            nm = float(inst.nm[c])
-            if not inst.kv_applicable[j]:
-                continue
-            ent = []
-            for i in range(I):
-                if (i, j, k) in col_x:
-                    coef = (inst.beta[j] / KB_PER_GB / nm
-                            * inst.r[i] * inst.T_res[i, j, k])
-                    ent.append((col_x[(i, j, k)], coef))
-            if ent:
-                add(ent, -np.inf,
-                    inst.C_gpu[k] - inst.B_eff[j, k] / nm)
-        # (8g) compute per active pair
-        for (j, k) in pairs:
-            ent = []
-            for i in range(I):
-                if (i, j, k) in col_x:
-                    ent.append((col_x[(i, j, k)],
-                                inst.alpha[i, j, k] * inst.r[i] * inst.lam[i] / 1e3))
-            if ent:
-                add(ent, -np.inf,
-                    inst.eta * 3600.0 * inst.P_gpu[k] * float(deploy.y[j, k]))
-        # (8h) storage per type
-        for i in range(I):
-            ent = []
-            base = float(np.sum(inst.B[None, :, None] * deploy.z[i]))
-            for (ii, j, k) in adm:
-                if ii == i:
-                    ent.append((col_x[(i, j, k)],
-                                inst.theta[i] / KB_PER_GB
-                                * inst.r[i] * inst.lam[i]))
-            if ent:
-                add(ent, -np.inf, inst.C_s - base)
-        # (8i) delay
-        for i in range(I):
-            ent = []
-            for (ii, j, k) in adm:
-                if ii == i:
-                    ent.append((col_x[(i, j, k)],
-                                float(inst.D_cfg[i, j, k, cfg[(j, k)]])))
-            if ent:
-                add(ent, -np.inf, float(inst.Delta[i]))
-        # (8j) error
-        for i in range(I):
-            ent = [(col_x[(i, j, k)], float(inst.e_bar[i, j, k]))
-                   for (ii, j, k) in adm if ii == i]
-            if ent:
-                add(ent, -np.inf, float(inst.eps[i]))
-
-        A = sparse.csr_matrix((vals, (rows, cols)), shape=(row, n))
-        # Objective: data storage + delay penalty + unmet penalty.
-        c_obj = np.zeros(n)
-        for (i, j, k), idx in col_x.items():
-            c_obj[idx] += (inst.Delta_T * inst.p_s * inst.theta[i] / KB_PER_GB
-                           * inst.r[i] * inst.lam[i])
-            c_obj[idx] += inst.rho[i] * 1e3 * float(
-                inst.D_cfg[i, j, k, cfg[(j, k)]])
-        for i in range(I):
-            c_obj[nx + i] = inst.Delta_T * inst.phi[i]
-        bounds = [(0.0, 1.0)] * nx + [(0.0, float(cap[i])) for i in range(I)]
-        lbs_a, ubs_a = np.array(lbs), np.array(ubs)
-        eq_mask = lbs_a == ubs_a
-        res = linprog(c_obj,
-                      A_ub=A[~eq_mask], b_ub=ubs_a[~eq_mask],
-                      A_eq=A[eq_mask], b_eq=ubs_a[eq_mask],
-                      bounds=bounds, method="highs")
-        return res
-
-    res = solve(u_cap)
-    capped_ok = res.status == 0
-    if not capped_ok:
-        res = solve(np.ones(I))
-    sol = Solution.empty(inst)
-    sol.y, sol.q, sol.w, sol.z = (deploy.y.copy(), deploy.q.copy(),
-                                  deploy.w.copy(), deploy.z.copy())
-    if res.status == 0:
-        for (i, j, k), idx in col_x.items():
-            sol.x[i, j, k] = res.x[idx]
-        sol.u = np.clip(res.x[nx:], 0.0, 1.0)
-    else:  # fully unserved fallback (deployment cannot route anything)
-        sol.u = np.ones(I)
+    system = Stage2System(inst, deploy, allow_any_deployed=allow_any_deployed)
+    r = system.solve(u_cap=u_cap)
+    sol = system.materialize(r)
     sol.method = deploy.method + "+stage2"
-    return sol, capped_ok
+    return sol, r.capped_ok
 
 
 def stage2_cost(inst: Instance, sol: Solution) -> float:

@@ -38,6 +38,17 @@ def diurnal_multipliers(day: str = "busy", seed: int = 7,
     return series
 
 
+def multi_day_multipliers(days=("busy", "volatile"), seed: int = 7,
+                          n_windows: int = WINDOWS_PER_DAY) -> np.ndarray:
+    """Concatenated multi-day replay series: one diurnal multiplier block
+    per entry of `days` ("busy"/"volatile"), each with its own noise draw
+    (seed offset per position so repeated day types differ).  `n_windows`
+    is windows PER DAY; the result has len(days)*n_windows windows."""
+    return np.concatenate([
+        diurnal_multipliers(day, seed=seed + 11 * idx, n_windows=n_windows)
+        for idx, day in enumerate(days)])
+
+
 def peak_to_trough(series: np.ndarray) -> float:
     return float(series.max() / series.min())
 

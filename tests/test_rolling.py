@@ -1,0 +1,142 @@
+"""Rolling-horizon replay: window-cost pricing, keep-best, fast path.
+
+Headline regression: the seed's `_window_cost` hardcoded the T=288 window
+fraction (24.0/288.0), so any replay with n_windows != 288 mispriced the
+operation cost.  With `window_h` threaded through, the total replay cost of
+a given demand profile is invariant to how finely the day is windowed —
+`test_window_pricing_invariant_to_window_count` fails on the seed code
+(which would price the 96-window day at a third of the 288-window day).
+"""
+import numpy as np
+import pytest
+
+from repro.core import Solution, default_instance, gh, objective, rolling
+from repro.core import replay_study
+from repro.core._scalar_ref import stage2_lp_ref
+from repro.core.rolling import STRICT_CAP, _ewma_forecasts
+from repro.core.solution import provisioning_cost
+from repro.core.stage2 import stage2_cost
+
+
+@pytest.fixture(scope="module")
+def inst():
+    return default_instance()
+
+
+@pytest.fixture(scope="module")
+def plan(inst):
+    return gh(inst)
+
+
+def test_window_pricing_invariant_to_window_count(inst, plan):
+    """T=96 vs T=288 consistency (acceptance): same constant demand day,
+    same deployment => same total cost, windows just slice it finer."""
+    totals = {}
+    for T in (96, 288):
+        path = np.tile(inst.lam, (T, 1))
+        r = rolling(inst, path, lambda i, p=plan: p, replan_every=None)
+        assert r.per_window_cost.shape == (T,)
+        totals[T] = r.total_cost
+    assert totals[96] == pytest.approx(totals[288], rel=1e-9)
+    # Per-window cost scales with the window length instead.
+    assert totals[96] / 96 == pytest.approx(totals[288] / 288 * 3, rel=1e-9)
+
+
+def test_window_pricing_matches_seed_at_288(inst, plan):
+    """At T=288 the parameterized window_h reproduces the seed's 24/288
+    pricing exactly: rental share + stage2_cost * window_h per window."""
+    T = 288
+    path = np.tile(inst.lam, (T, 1))
+    r = rolling(inst, path, lambda i, p=plan: p, replan_every=None)
+    cap = np.full(inst.I, STRICT_CAP)
+    sol, _ = stage2_lp_ref(inst, plan, u_cap=cap)
+    want = (provisioning_cost(inst, plan) / inst.Delta_T * (24.0 / 288.0)
+            + stage2_cost(inst, sol) * (24.0 / 288.0))
+    assert r.per_window_cost[0] == pytest.approx(want, rel=1e-9)
+    assert r.total_cost == pytest.approx(T * want, rel=1e-9)
+
+
+def test_rolling_batched_matches_window_loop(inst):
+    """Segment-batched fast path == per-window stage2_lp loop, including
+    across replan boundaries."""
+    rng = np.random.default_rng(0)
+    mult = 1.0 + 0.5 * np.sin(np.linspace(0, 2 * np.pi, 18)) \
+        + rng.uniform(-0.05, 0.05, 18)
+    path = np.outer(mult, inst.lam)
+    planner = lambda i: gh(i)
+    rb = rolling(inst, path, planner, replan_every=6)
+    rl = rolling(inst, path, planner, replan_every=6, batched=False)
+    assert rb.replans == rl.replans
+    assert rb.violation_rate == rl.violation_rate
+    assert np.allclose(rb.per_window_cost, rl.per_window_cost,
+                       rtol=1e-9, atol=1e-9)
+
+
+def test_keep_best_rejects_worse_candidate(inst, plan):
+    """A candidate that scores worse on the current forecast is never
+    adopted: the dead-state bug would have made this vacuous."""
+    calls = {"n": 0}
+
+    def planner(i):
+        calls["n"] += 1
+        if calls["n"] == 1:
+            return plan
+        return Solution.empty(i)      # objective: everything unmet — awful
+
+    path = np.tile(inst.lam, (12, 1))
+    r = rolling(inst, path, planner, replan_every=4)
+    assert calls["n"] > 1             # candidates were generated...
+    assert r.replans == 0             # ...and every one rejected
+    r_static = rolling(inst, path, lambda i, p=plan: p, replan_every=None)
+    assert r.total_cost == pytest.approx(r_static.total_cost, rel=1e-9)
+
+
+def test_keep_best_adopts_better_candidate(inst):
+    """Starting from an empty deployment, the first GH candidate must win
+    the keep-best comparison and be used for subsequent windows."""
+    calls = {"n": 0}
+
+    def planner(i):
+        calls["n"] += 1
+        if calls["n"] == 1:
+            return Solution.empty(i)
+        return gh(i)
+
+    path = np.tile(inst.lam, (8, 1))
+    r = rolling(inst, path, planner, replan_every=4)
+    assert r.replans >= 1
+    r_bad = rolling(inst, path, lambda i: Solution.empty(i),
+                    replan_every=None)
+    assert r.total_cost < r_bad.total_cost
+
+
+def test_ewma_forecasts_recursion():
+    path = np.array([[1.0], [2.0], [4.0]])
+    fc = _ewma_forecasts(path, 0.5)
+    # seeded at lam[0]: fc0 = .5*1+.5*1 = 1; fc1 = .5*2+.5*1 = 1.5; ...
+    assert np.allclose(fc[:, 0], [1.0, 1.5, 2.75])
+
+
+def test_replay_study_multi_day_and_stress(inst, plan):
+    planner = lambda i, p=plan: p
+    r = replay_study(inst, planner, days=("busy", "volatile"), n_windows=12)
+    assert r.per_window_cost.shape == (24,)
+    assert np.isfinite(r.total_cost)
+    r_s = replay_study(inst, planner, days=("busy",), n_windows=12,
+                       stress=1.5)
+    assert np.isfinite(r_s.total_cost)
+    # 1.5x delay/error inflation can only make operation costlier.
+    r_b = replay_study(inst, planner, days=("busy",), n_windows=12)
+    assert r_s.total_cost >= r_b.total_cost - 1e-9
+
+
+def test_multi_day_window_h_spans_days(inst, plan):
+    """Two concatenated days keep the per-day window length: the replay is
+    48 h long, so its rental share alone must total ~2 provisioning days."""
+    planner = lambda i, p=plan: p
+    one = replay_study(inst, planner, days=("busy",), n_windows=12, seed=3)
+    two = replay_study(inst, planner, days=("busy", "busy"), n_windows=12,
+                       seed=3)
+    assert two.per_window_cost.shape[0] == 2 * one.per_window_cost.shape[0]
+    # First day of the two-day replay is the same series (same seed).
+    assert np.allclose(two.per_window_cost[:12], one.per_window_cost)
