@@ -1,14 +1,18 @@
 """Allocator scaling: before/after rows for the vectorized engine.
 
-Times the frozen scalar seed path (`_scalar_ref`, the "before") against the
-vectorized engine ("after") on random instances growing to (30,30,20) —
-beyond the paper's largest Table-6 size — and emits one
-``name,us_per_call`` row per (size, method, path) so perf regressions show
-up directly in CI logs.
+Three points per size and method so both engine generations are visible in
+CI logs:
 
-The scalar AGH is capped at sizes where it finishes in a few seconds; for
-larger sizes only its GH "before" row is emitted (the AGH-before cost is
-the reason this engine exists).
+* ``before``   — the frozen scalar seed path (`_scalar_ref`, pre-PR-1);
+* ``ref``      — AGH with ``local_search="reference"`` (the PR-1/PR-2
+                 vectorized engine with the first-improvement probe loop);
+* ``after``    — the PR-3 batched engine (scored move matrices, batched
+                 drains, raised multi-start budgets).
+
+Emits one ``name,us_per_call`` row per (size, method, path) so perf
+regressions show up directly in CI logs.  The scalar paths are capped at
+sizes where they finish in seconds; for larger sizes only the vectorized
+rows are emitted (the scalar cost is the reason the engine exists).
 """
 from __future__ import annotations
 
@@ -17,29 +21,35 @@ from repro.core._scalar_ref import agh_scalar, gh_scalar
 
 from .common import Timer, emit
 
-SIZES = [(6, 6, 10), (10, 10, 10), (15, 15, 10), (20, 20, 20), (30, 30, 20)]
+SIZES = [(6, 6, 10), (10, 10, 10), (15, 15, 10), (20, 20, 20), (30, 30, 20),
+         (40, 40, 30), (60, 60, 40)]
+QUICK_SIZES = [(6, 6, 10), (20, 20, 20)]
 SCALAR_AGH_MAX = 10 * 10 * 10   # scalar AGH above this takes minutes
+SCALAR_GH_MAX = 30 * 30 * 20    # scalar GH above this takes tens of seconds
 
 
-def run(sizes=SIZES, scalar_agh_max: int = SCALAR_AGH_MAX) -> list[dict]:
+def run(sizes=SIZES, scalar_agh_max: int = SCALAR_AGH_MAX,
+        scalar_gh_max: int = SCALAR_GH_MAX) -> list[dict]:
     rows = []
     for (I, J, K) in sizes:
         inst = random_instance(I, J, K, seed=42)
         size = f"({I},{J},{K})"
         row = dict(size=size)
 
-        with Timer() as t:
-            g_ref, _ = gh_scalar(inst)
-        row["GH_before_us"] = t.us
-        emit(f"allocator_scaling.{size}.GH.before", t.us,
-             f"obj={objective(inst, g_ref):.2f}")
+        if I * J * K <= scalar_gh_max:
+            with Timer() as t:
+                g_ref, _ = gh_scalar(inst)
+            row["GH_before_us"] = t.us
+            emit(f"allocator_scaling.{size}.GH.before", t.us,
+                 f"obj={objective(inst, g_ref):.2f}")
 
         with Timer() as t:
             g_vec = gh(inst)
         row["GH_after_us"] = t.us
-        emit(f"allocator_scaling.{size}.GH.after", t.us,
-             f"obj={objective(inst, g_vec):.2f};"
-             f"speedup={row['GH_before_us'] / max(t.us, 1e-9):.1f}x")
+        derived = f"obj={objective(inst, g_vec):.2f}"
+        if "GH_before_us" in row:
+            derived += f";speedup={row['GH_before_us'] / max(t.us, 1e-9):.1f}x"
+        emit(f"allocator_scaling.{size}.GH.after", t.us, derived)
 
         if I * J * K <= scalar_agh_max:
             with Timer() as t:
@@ -49,9 +59,16 @@ def run(sizes=SIZES, scalar_agh_max: int = SCALAR_AGH_MAX) -> list[dict]:
                  f"obj={objective(inst, a_ref):.2f}")
 
         with Timer() as t:
+            a_mode_ref = agh(inst, local_search="reference")
+        row["AGH_ref_us"] = t.us
+        emit(f"allocator_scaling.{size}.AGH.ref", t.us,
+             f"obj={objective(inst, a_mode_ref):.2f}")
+
+        with Timer() as t:
             a_vec = agh(inst)
         row["AGH_after_us"] = t.us
-        derived = f"obj={objective(inst, a_vec):.2f}"
+        derived = (f"obj={objective(inst, a_vec):.2f};"
+                   f"ls_speedup={row['AGH_ref_us'] / max(t.us, 1e-9):.1f}x")
         if "AGH_before_us" in row:
             derived += f";speedup={row['AGH_before_us'] / max(t.us, 1e-9):.1f}x"
         emit(f"allocator_scaling.{size}.AGH.after", t.us, derived)
@@ -62,7 +79,10 @@ def run(sizes=SIZES, scalar_agh_max: int = SCALAR_AGH_MAX) -> list[dict]:
 if __name__ == "__main__":
     import argparse
     ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smallest + acceptance size only (CI smoke)")
     ap.add_argument("--scalar-agh-max", type=int, default=SCALAR_AGH_MAX,
                     help="largest I*J*K for which the scalar AGH is timed")
     args = ap.parse_args()
-    run(scalar_agh_max=args.scalar_agh_max)
+    run(sizes=QUICK_SIZES if args.quick else SIZES,
+        scalar_agh_max=args.scalar_agh_max)

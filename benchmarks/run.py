@@ -21,6 +21,12 @@ def main(argv=None) -> int:
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: table2,table3,...")
+    ap.add_argument("--workers", type=int, default=None,
+                    help="shared process-pool width for the sections that "
+                         "fan out (table2's scenario x method grid)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also dump every section's row dicts as one JSON "
+                         "file (CI uploads it as a workflow artifact)")
     args = ap.parse_args(argv)
 
     S = 30 if args.quick else (500 if args.full else 120)
@@ -31,7 +37,8 @@ def main(argv=None) -> int:
                    stage2_scaling, table2, table3, table4, table5, table6)
 
     sections = {
-        "table2": lambda: table2.run(S=S, include_dm=False),
+        "table2": lambda: table2.run(S=S, include_dm=False,
+                                     workers=args.workers),
         "table3": lambda: table3.run(),
         "table4": lambda: table4.run(trials=trials, n_windows=windows,
                                      dm_limit=120.0 if not args.full else 600.0,
@@ -46,7 +53,7 @@ def main(argv=None) -> int:
             sizes=(table6.SIZES[:3] if args.quick
                    else (table6.SIZES_EXT if args.full else table6.SIZES))),
         "allocator_scaling": lambda: allocator_scaling.run(
-            sizes=(allocator_scaling.SIZES[:2] if args.quick
+            sizes=(allocator_scaling.QUICK_SIZES if args.quick
                    else allocator_scaling.SIZES)),
         "stage2_scaling": lambda: stage2_scaling.run(
             quick=args.quick, S=(500 if args.full else 120)),
@@ -57,14 +64,27 @@ def main(argv=None) -> int:
     }
     only = set(args.only.split(",")) if args.only else None
     t0 = time.time()
+    collected: dict[str, object] = {}
     for name, fn in sections.items():
         if only and name not in only:
             continue
         print(f"# === {name} ===", flush=True)
         try:
-            fn()
+            rows = fn()
+            if args.json and isinstance(rows, list):
+                collected[name] = rows
         except Exception as e:  # keep the harness running
             print(f"{name},0,ERROR:{type(e).__name__}:{e}", flush=True)
+            if args.json:
+                collected[name] = {"error": f"{type(e).__name__}: {e}"}
+    if args.json:
+        import json
+
+        os.makedirs(os.path.dirname(os.path.abspath(args.json)),
+                    exist_ok=True)
+        with open(args.json, "w") as fh:
+            json.dump(collected, fh, indent=2, default=str)
+        print(f"# wrote {args.json}", flush=True)
     print(f"# benchmarks done in {time.time()-t0:.0f}s", flush=True)
     return 0
 

@@ -5,6 +5,14 @@ S3 critical ($72); S4 high penalty ($75, phi_v=5x); S5 high penalty +
 critical ($72, phi_v=5x). Methods: GH, AGH, LPR, DVR, HF (+DM optionally).
 Metrics: Stage-1 cost, expected cost over S perturbed scenarios, SLO
 violation rate (>1% unserved per (scenario, type)).
+
+With ``workers`` (``benchmarks.run --workers``), the 5 scenarios x 5
+methods cells are batched through ONE shared process pool — each cell
+(plan + S-scenario Stage-2 evaluation) is independent, so the grid
+parallelizes embarrassingly; results are gathered and emitted in the
+canonical scenario/method order, so the output is identical to the
+sequential path's.  Inside a pooled cell the Stage-2 ``workers=`` fan-out
+stays off (the pool already owns the cores).
 """
 from __future__ import annotations
 
@@ -23,30 +31,56 @@ SCENARIOS = {
     "S5": dict(budget=72.0, phi_v_mult=5.0),
 }
 
+_METHODS = {"GH": gh, "AGH": agh, "LPR": lpr, "DVR": dvr, "HF": hf}
+
+
+def _run_cell(args: tuple) -> tuple[dict, float]:
+    """One (scenario, method) cell: plan on the forecast instance, then the
+    frozen-deployment Stage-2 evaluation.  Module-level and driven by
+    picklable primitives so a process pool can run it."""
+    sname, inst_kw, mname, S, u_cap, dm_limit = args
+    inst = default_instance(seed=0, **inst_kw)
+    if mname == "DM":
+        fn = lambda i: solve_milp(i, time_limit=dm_limit)
+    else:
+        fn = _METHODS[mname]
+    with Timer() as t:
+        sol = fn(inst)
+    res = evaluate(inst, sol, S=S, u_cap=u_cap)
+    row = dict(scenario=sname, method=mname,
+               stage1=round(res.stage1_cost, 1),
+               cost=round(res.expected_cost, 1),
+               viol_pct=round(100 * res.violation_rate, 1),
+               plan_s=round(sol.runtime_s, 3))
+    return row, t.us
+
 
 def run(S: int = 100, include_dm: bool = False, dm_limit: float = 180.0,
-        u_cap: float = 1.0) -> list[dict]:
-    rows = []
+        u_cap: float = 1.0, workers: int | None = None) -> list[dict]:
     cap = np.full(6, u_cap)
-    for sname, kw in SCENARIOS.items():
-        inst = default_instance(seed=0, **kw)
-        methods = [("GH", gh), ("AGH", agh), ("LPR", lpr), ("DVR", dvr),
-                   ("HF", hf)]
-        if include_dm:
-            methods.append(("DM", lambda i: solve_milp(i, time_limit=dm_limit)))
-        for mname, fn in methods:
-            with Timer() as t:
-                sol = fn(inst)
-            res = evaluate(inst, sol, S=S, u_cap=cap)
-            row = dict(scenario=sname, method=mname,
-                       stage1=round(res.stage1_cost, 1),
-                       cost=round(res.expected_cost, 1),
-                       viol_pct=round(100 * res.violation_rate, 1),
-                       plan_s=round(sol.runtime_s, 3))
-            rows.append(row)
-            emit(f"table2.{sname}.{mname}", t.us,
-                 f"stage1=${row['stage1']};cost=${row['cost']};"
-                 f"viol={row['viol_pct']}%")
+    methods = list(_METHODS) + (["DM"] if include_dm else [])
+    cells = [(sname, kw, mname, S, cap, dm_limit)
+             for sname, kw in SCENARIOS.items() for mname in methods]
+    import multiprocessing as mp
+    if workers and workers > 1 and "fork" in mp.get_all_start_methods():
+        import concurrent.futures as cf
+        from concurrent.futures.process import BrokenProcessPool
+        try:
+            ctx = mp.get_context("fork")
+            with cf.ProcessPoolExecutor(max_workers=workers,
+                                        mp_context=ctx) as ex:
+                results = list(ex.map(_run_cell, cells))
+        except (OSError, BrokenProcessPool):
+            # pool-infrastructure failure only; cell errors propagate
+            results = [_run_cell(c) for c in cells]
+    else:
+        results = [_run_cell(c) for c in cells]
+    rows = []
+    for (sname, _, mname, *_), (row, us) in zip(cells, results):
+        rows.append(row)
+        emit(f"table2.{sname}.{mname}", us,
+             f"stage1=${row['stage1']};cost=${row['cost']};"
+             f"viol={row['viol_pct']}%")
     return rows
 
 
@@ -55,5 +89,8 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--S", type=int, default=500)
     ap.add_argument("--dm", action="store_true")
+    ap.add_argument("--workers", type=int, default=None,
+                    help="fan the scenario x method grid over one shared "
+                         "process pool")
     args = ap.parse_args()
-    run(S=args.S, include_dm=args.dm)
+    run(S=args.S, include_dm=args.dm, workers=args.workers)

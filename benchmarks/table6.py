@@ -3,11 +3,22 @@
 Paper: DM exceeds 600 s at (15,15,10); GH < 1 s and AGH < 3 s everywhere
 (>= 260x speedup at (20,20,20)).
 
-The heuristic columns run on the vectorized allocation engine; with
-``include_before`` each row also times the frozen scalar seed path
-(`_scalar_ref.gh_scalar`) so the before/after speedup is visible next to
-the paper's DM baseline.  `SIZES_EXT` pushes one size past the paper's
-largest instance."""
+The heuristic columns run on the vectorized allocation engine.  Three
+"before" references are timed next to it: the frozen scalar seed GH
+(`_scalar_ref.gh_scalar`, capped at `SCALAR_GH_MAX` — it takes tens of
+seconds beyond (30,30,20)), and AGH in ``local_search="reference"`` mode
+(the PR-2 first-improvement engine) so the batched-local-search speedup is
+visible per size.
+
+DM column: `dm_max_size` bounds the largest I*J*K for which the exact MILP
+is attempted — the unified default of 1000 runs DM through (10,10,10) and
+skips it above (at (15,15,10) the paper already reports >600 s; the CLI's
+``--dm-max-size`` raises the bound for full-replication runs, as does
+``benchmarks.run --full``).  Skipped rows show ``DM_s = skipped(>size)``.
+
+``SIZES_EXT`` (CLI ``--ext``) pushes past the paper's largest instance:
+(30,30,20) from PR 1 plus the PR-3 beyond-paper sizes (40,40,30),
+(60,60,40) and (100,80,40)."""
 from __future__ import annotations
 
 from repro.core import agh, gh, objective, random_instance, solve_milp
@@ -16,10 +27,12 @@ from repro.core._scalar_ref import gh_scalar
 from .common import Timer, emit
 
 SIZES = [(4, 4, 5), (6, 6, 10), (10, 10, 10), (15, 15, 10), (20, 20, 20)]
-SIZES_EXT = SIZES + [(30, 30, 20)]
+SIZES_EXT = SIZES + [(30, 30, 20), (40, 40, 30), (60, 60, 40), (100, 80, 40)]
+DM_MAX_SIZE = 1000              # unified default: DM through (10,10,10)
+SCALAR_GH_MAX = 30 * 30 * 20    # frozen scalar GH beyond this: minutes
 
 
-def run(dm_limit: float = 600.0, dm_max_size: int = 1000,
+def run(dm_limit: float = 600.0, dm_max_size: int = DM_MAX_SIZE,
         sizes=SIZES, include_before: bool = True) -> list[dict]:
     rows = []
     for (I, J, K) in sizes:
@@ -27,13 +40,16 @@ def run(dm_limit: float = 600.0, dm_max_size: int = 1000,
         row = dict(size=f"({I},{J},{K})")
         g = gh(inst)
         row["GH_s"] = round(g.runtime_s, 3)
-        if include_before:
+        if include_before and I * J * K <= SCALAR_GH_MAX:
             with Timer() as t:
                 gh_scalar(inst)
             row["GH_before_s"] = round(t.dt, 3)
         a = agh(inst)
         row["AGH_s"] = round(a.runtime_s, 3)
         row["AGH_obj"] = round(objective(inst, a), 1)
+        if include_before:
+            a_ref = agh(inst, local_search="reference")
+            row["AGH_ref_s"] = round(a_ref.runtime_s, 3)
         if I * J * K <= dm_max_size:
             d = solve_milp(inst, time_limit=dm_limit)
             row["DM_s"] = round(d.runtime_s, 2)
@@ -44,7 +60,7 @@ def run(dm_limit: float = 600.0, dm_max_size: int = 1000,
                     100 * (row["AGH_obj"] - row["DM_obj"])
                     / max(row["DM_obj"], 1e-9), 2)
         else:
-            row["DM_s"] = f">{dm_limit:.0f} (skipped)"
+            row["DM_s"] = f"skipped(>{dm_max_size})"
         rows.append(row)
         emit(f"table6.{row['size']}", row["AGH_s"] * 1e6,
              ";".join(f"{k}={v}" for k, v in row.items() if k != "size"))
@@ -55,9 +71,11 @@ if __name__ == "__main__":
     import argparse
     ap = argparse.ArgumentParser()
     ap.add_argument("--dm-limit", type=float, default=600.0)
-    ap.add_argument("--dm-max-size", type=int, default=10**9)
+    ap.add_argument("--dm-max-size", type=int, default=DM_MAX_SIZE,
+                    help="largest I*J*K for which the exact MILP is "
+                         "attempted (default skips DM above (10,10,10))")
     ap.add_argument("--ext", action="store_true",
-                    help="include the beyond-paper (30,30,20) size")
+                    help="include the beyond-paper sizes up to (100,80,40)")
     args = ap.parse_args()
     run(dm_limit=args.dm_limit, dm_max_size=args.dm_max_size,
         sizes=SIZES_EXT if args.ext else SIZES)

@@ -8,8 +8,9 @@ from .evaluate import EvalResult, evaluate
 from .gh import gh, greedy_heuristic
 from .instance import (Instance, ScenarioBatch, default_instance,
                        random_instance)
-from .mechanisms import (State, m1_select, m3_upgrade, max_commit,
-                         max_commit_batch, rank_keys_all, solution_from_state,
+from .mechanisms import (MoveScores, State, m1_select, m3_upgrade,
+                         max_commit, max_commit_batch, rank_keys_all,
+                         score_moves_batch, solution_from_state,
                          state_objective)
 from .milp import solve_milp
 from .queueing import (queueing_delay, slo_attainment_with_queueing,
@@ -23,8 +24,9 @@ __all__ = [
     "agh", "dvr", "hf", "lpr", "EvalResult", "evaluate", "gh",
     "greedy_heuristic", "Instance", "ScenarioBatch", "default_instance",
     "random_instance",
-    "State", "m1_select", "m3_upgrade", "max_commit", "max_commit_batch",
-    "rank_keys_all", "solution_from_state", "state_objective",
+    "MoveScores", "State", "m1_select", "m3_upgrade", "max_commit",
+    "max_commit_batch", "rank_keys_all", "score_moves_batch",
+    "solution_from_state", "state_objective",
     "solve_milp", "RollingResult", "replay_study",
     "rolling", "volatility_study", "Solution", "cost_terms", "feasibility",
     "is_feasible", "objective", "proc_delay", "provisioning_cost",

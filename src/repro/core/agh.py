@@ -4,47 +4,63 @@ Enhancements over GH:
   * multi-start construction: 8 deterministic orderings (ascending/descending
     each of lambda_i, phi_i, per-type weight-footprint proxy, and error
     tightness eps_i) plus R adaptive random permutations (Remark 2:
-    R = 3 / 5 / 10 / 20 by problem scale N = I*J*K), early stop after five
-    consecutive non-improving orderings;
+    R = 3 / 5 / 10 / 20 by problem scale N = I*J*K; the batched engine
+    raises the schedule to 5 / 8 / 14 / 24 with the wall-clock it frees),
+    early stop after five consecutive non-improving orderings;
   * relocate local search (L = 3 passes): move committed (i,j,k) fractions to
     alternative pairs when feasible and strictly improving;
   * consolidation: drain lightly loaded active pairs onto other active pairs
     and deactivate them when feasible and strictly improving.
 
-Local-search evaluation is delta-based: a trial move mutates the running
-`State` through `remove_assignment` / `commit` (each pushing an exact undo
-record), the objective delta comes from `state_objective` in O(I), and a
-rejected move is rolled back with `undo_all` — no Solution copies, no
-from-scratch State rebuilds, no full constraint-system re-evaluation per
-trial.  Feasibility is guaranteed by construction (`max_commit` caps every
-commit); the full `feasibility()` pass survives as the final debug check on
-the returned solution (and per-move when `validate=True`).  The seed's
-rebuild-everything implementation is preserved in `_scalar_ref.agh_scalar`
-and pinned to this one by tests/test_vectorized_equivalence.py.
+Two improvement engines share the construction state:
+
+``local_search="batched"`` (default) — the scored-matrix engine.  Per
+source cell, `score_moves_batch` evaluates *every* (j2,k2) destination in
+one pass (config selection, delay/M1 admissibility, one `max_commit_batch`
+cap evaluation, vectorized delta objective) and `_relocate_batched` applies
+the best improving move from that matrix; `_try_drain_batched` batch-scores
+all (type x destination) placements of a draining pair up front and places
+each type on its cheapest verified destination.  Because it scores the full
+destination grid (the paper's "scan all (j',k')") instead of the reference
+path's active-pairs-plus-3 shortlist, it both runs faster and never returns
+a worse objective on the equivalence suite.
+
+``local_search="reference"`` — the first-improvement scalar probe loop
+(PR-1/PR-2 behavior), kept bit-identical to `_scalar_ref.agh_scalar` by
+tests/test_vectorized_equivalence.py.
+
+Multi-start fans out over a process pool when `workers` is given (auto for
+large instances): Phase 1 is ordering-independent, so its snapshot and the
+precomputed `Instance` tensors are shared with forked workers, and the
+reduction applies the sequential driver's strict-improvement rule in
+ordering-index order — the selected solution is independent of worker
+count and scheduling.
 """
 from __future__ import annotations
 
+import os
 import time
 
 import numpy as np
 
-from .gh import greedy_heuristic
+from .gh import _phase1, greedy_heuristic
 from .instance import Instance
-from .mechanisms import (State, commit, deactivate_pair, max_commit,
-                         max_commit_batch, remove_assignment,
-                         solution_from_state, state_objective, state_restore,
-                         state_snapshot, undo_all)
+from .mechanisms import (State, commit, deactivate_pair, delay_sel,
+                         max_commit, max_commit_batch, remove_assignment,
+                         score_moves_batch, solution_from_state,
+                         state_objective, state_restore, state_snapshot,
+                         undo_all)
 from .solution import Solution, is_feasible, objective
 
 
 def _orderings(inst: Instance, R: int, rng: np.random.Generator) -> list[np.ndarray]:
     lam, phi, eps = inst.lam, inst.phi, inst.eps
     # Per-type weight-footprint proxy: smallest model whose FP16 error meets
-    # the type's SLO ("B_j as it appears for that type").
-    bproxy = np.empty(inst.I)
-    for i in range(inst.I):
-        ok = np.where(inst.e_base[i] <= inst.eps[i])[0]
-        bproxy[i] = inst.B[ok].min() if len(ok) else inst.B.max()
+    # the type's SLO ("B_j as it appears for that type") — one masked min
+    # over [I,J] instead of a per-type Python loop.
+    ok = inst.e_base <= inst.eps[:, None]
+    bmin = np.where(ok, inst.B[None, :], np.inf).min(axis=1)
+    bproxy = np.where(np.isfinite(bmin), bmin, inst.B.max())
     keys = [lam, phi, bproxy, eps]
     orders = []
     for key in keys:
@@ -55,19 +71,21 @@ def _orderings(inst: Instance, R: int, rng: np.random.Generator) -> list[np.ndar
     return orders
 
 
-def _adaptive_R(inst: Instance) -> int:
+def _adaptive_R(inst: Instance, batched: bool = False) -> int:
+    """Remark-2 random-restart budget; the batched engine runs a raised
+    schedule, spending the wall-clock the scored-matrix search frees."""
     N = inst.I * inst.J * inst.K
     if N > 5000:
-        return 3
+        return 5 if batched else 3
     if N > 2000:
-        return 5
+        return 8 if batched else 5
     if N > 500:
-        return 10
-    return 20
+        return 14 if batched else 10
+    return 24 if batched else 20
 
 
 # ---------------------------------------------------------------------------
-# Local search (delta moves on the running State)
+# Reference local search (first-improvement scalar probes, PR-1/PR-2 path)
 # ---------------------------------------------------------------------------
 
 def _try_move(st: State, i: int, j: int, k: int, j2: int, k2: int,
@@ -105,11 +123,10 @@ def _try_move(st: State, i: int, j: int, k: int, j2: int, k2: int,
 def _move_targets(st: State, i: int, ranked_jk: np.ndarray,
                   n_inactive: int = 3) -> list[tuple[int, int]]:
     """Candidate destinations for relocating type i: every ACTIVE pair plus
-    the few cheapest inactive pairs that pass M1 for this type. (The paper
-    scans all (j', k'); restricting to this set keeps relocate inside the
-    paper's runtime envelope — the optimum of a move almost always shares
-    or cheaply activates.)  `ranked_jk` is the per-type list of admissible
-    pairs pre-sorted by activation cost, computed once per AGH call."""
+    the few cheapest inactive pairs that pass M1 for this type (the
+    reference path's shortlist; the batched engine scores the full grid).
+    `ranked_jk` is the per-type list of admissible pairs pre-sorted by
+    activation cost, computed once per AGH call."""
     K = st.inst.K
     targets = [(int(f) // K, int(f) % K)
                for f in np.flatnonzero((st.q > 0.5).ravel())]
@@ -128,14 +145,16 @@ def _move_targets(st: State, i: int, ranked_jk: np.ndarray,
 def _rank_inactive_targets(inst: Instance) -> list[np.ndarray]:
     """Per type: flat (j,k) indices of M1+error-admissible pairs, sorted by
     activation cost p_c[k] * nm(M1 config) with j-major tie order — the
-    state-independent part of `_move_targets`."""
-    ranked = []
-    for i in range(inst.I):
-        flat = np.flatnonzero(inst.cover_ok[i].ravel())
-        cost = (inst.p_c[flat % inst.K]
-                * inst.nm[inst.cfg_m1[i].ravel()[flat]])
-        ranked.append(flat[np.argsort(cost, kind="stable")])
-    return ranked
+    state-independent part of `_move_targets`.  One masked stable argsort
+    over the [I, J*K] cost matrix replaces the per-type Python loop; the
+    inadmissible cells sort to the tail as +inf and are sliced off."""
+    I, JK = inst.I, inst.J * inst.K
+    adm = inst.cover_ok.reshape(I, JK)
+    cost = (inst.p_c[None, None, :]
+            * inst.nm[np.maximum(inst.cfg_m1, 0)]).reshape(I, JK)
+    order = np.argsort(np.where(adm, cost, np.inf), axis=1, kind="stable")
+    counts = adm.sum(axis=1)
+    return [order[i, :counts[i]] for i in range(I)]
 
 
 def _relocate(st: State, L: int, ranked: list[np.ndarray],
@@ -184,8 +203,7 @@ def _try_drain(st: State, j: int, k: int, validate: bool) -> bool:
         c_dest = np.where(st.q > 0.5, st.cfg, -1)
         c_dest[j, k] = -1
         caps = max_commit_batch(st, i, c_dest)
-        d_dest = np.take_along_axis(
-            inst.D_cfg[i], np.maximum(c_dest, 0)[:, :, None], axis=2)[:, :, 0]
+        d_dest = delay_sel(inst, i, c_dest)
         fits = ((c_dest >= 0) & (d_dest <= inst.Delta[i])
                 & (caps >= frac - 1e-9)).ravel()
         placed = False
@@ -233,6 +251,120 @@ def _consolidate(st: State, validate: bool) -> None:
             return
 
 
+# ---------------------------------------------------------------------------
+# Batched local search (scored move matrices, best-improvement)
+# ---------------------------------------------------------------------------
+
+def _relocate_batched(st: State, L: int, validate: bool) -> None:
+    """Relocate via `score_moves_batch`: per source cell, every destination
+    is scored in one pass and the best strictly-improving move is applied.
+    Scans the full (j',k') grid (the paper's scan), not the reference
+    path's active-pairs-plus-3 shortlist."""
+    inst = st.inst
+    K = inst.K
+    for _ in range(L):
+        improved = False
+        obj = state_objective(st)
+        for i in range(inst.I):
+            for f in np.flatnonzero((st.x[i] > 1e-9).ravel()):
+                j, k = int(f) // K, int(f) % K
+                if st.x[i, j, k] <= 1e-9:   # merged away earlier this pass
+                    continue
+                ms = score_moves_batch(st, i, j, k, improve_below=obj - 1e-9)
+                if not ms.admissible.any():
+                    continue
+                flat = int(np.argmin(ms.obj_after))
+                j2, k2 = flat // K, flat % K
+                remove_assignment(st, i, j, k)
+                commit(st, i, j2, k2, int(ms.c_dest[j2, k2]), ms.frac)
+                obj = state_objective(st)
+                improved = True
+                if validate:
+                    _assert_state_consistent(st)
+        if not improved:
+            break
+
+
+def _try_drain_batched(st: State, j: int, k: int, validate: bool) -> bool:
+    """Drain pair (j,k): one vectorized pass scores every (type x
+    destination) placement — delay fits and the commit-cost delta over the
+    compressed active-destination list — then each type lands on its
+    cheapest destination in score order, with one O(1) `max_commit` check
+    at commit time (caps only shrink as earlier types are placed, so the
+    pre-placement scores over-approximate and the check restores
+    exactness).  Structurally impossible drains (some type has no
+    delay-admissible destination — the common case at a converged state)
+    are rejected before the snapshot/detach round trip."""
+    inst = st.inst
+    K = inst.K
+    types = np.flatnonzero(st.x[:, j, k] > 1e-9)
+    dest = np.flatnonzero((st.q > 0.5).ravel())
+    dest = dest[dest != j * K + k]
+    if types.size:
+        if dest.size == 0:
+            return False
+        jj, kk = dest // K, dest % K
+        cfg_d = st.cfg[jj, kk]
+        # One (T, n_dest) score pass: delay admissibility is state-free and
+        # the delta rows read only type-local state (z[i], r_rem[i]), which
+        # other types' placements never touch — so the matrix computed here
+        # stays exact for each type at its own placement time.
+        d_td = inst.D_cfg[types[:, None], jj[None, :], kk[None, :],
+                          cfg_d[None, :]]
+        fits = d_td <= inst.Delta[types, None]
+        if not fits.any(axis=1).all():
+            return False
+        fr = st.x[types, j, k][:, None]
+        delta = (inst.Delta_T * inst.p_s
+                 * (np.where(st.z[types][:, jj, kk] < 0.5,
+                             inst.B[jj][None, :], 0.0)
+                    + inst.data_gb[types, None] * fr)
+                 + inst.rho[types, None] * d_td * 1e3 * fr)
+        score = np.where(fits, delta, np.inf)
+        order = np.argsort(score, axis=1, kind="stable")
+    snap = state_snapshot(st)
+    obj0 = state_objective(st)
+    fracs = [remove_assignment(st, int(i), j, k, auto_deactivate=False)
+             for i in types]
+    deactivate_pair(st, j, k)
+    ok = True
+    for t, i in enumerate(types):
+        i, frac = int(i), float(fracs[t])
+        placed = False
+        for p in order[t]:
+            if not np.isfinite(score[t, p]):
+                break
+            j2, k2 = int(jj[p]), int(kk[p])
+            if max_commit(st, i, j2, k2, int(st.cfg[j2, k2])) >= frac - 1e-9:
+                commit(st, i, j2, k2, int(st.cfg[j2, k2]), frac)
+                placed = True
+                break
+        if not placed:
+            ok = False
+            break
+    if ok and state_objective(st) < obj0 - 1e-9:
+        if validate:
+            _assert_state_consistent(st)
+        return True
+    state_restore(st, snap)
+    return False
+
+
+def _consolidate_batched(st: State, validate: bool) -> None:
+    inst = st.inst
+    while True:
+        flat = np.flatnonzero((st.q > 0.5).ravel())
+        active = sorted((float(st.y.ravel()[f]), int(f) // inst.K,
+                         int(f) % inst.K) for f in flat)
+        improved = False
+        for _, j, k in active:
+            if _try_drain_batched(st, j, k, validate):
+                improved = True
+                break
+        if not improved:
+            return
+
+
 def _assert_state_consistent(st: State) -> None:
     """Debug path: the incremental state must match a from-scratch
     objective/feasibility evaluation of its materialized solution."""
@@ -245,31 +377,145 @@ def _assert_state_consistent(st: State) -> None:
 
 
 # ---------------------------------------------------------------------------
-# AGH driver
+# AGH driver (sequential early-stop or deterministic parallel fan-out)
 # ---------------------------------------------------------------------------
 
-def agh(inst: Instance, R: int | None = None, L: int = 3, seed: int = 0,
-        patience: int = 5, validate: bool = False) -> Solution:
-    t0 = time.perf_counter()
-    rng = np.random.default_rng(seed)
-    if R is None:
-        R = _adaptive_R(inst)
-    ranked = _rank_inactive_targets(inst)
-    best: Solution | None = None
-    best_obj = np.inf
-    stale = 0
-    for order in _orderings(inst, R, rng):
-        _, st = greedy_heuristic(inst, order=order)
+_PARALLEL_MIN_N = 24000     # auto fan-out only beyond (20,20,20)-class sizes
+
+
+def _run_ordering(inst: Instance, order: np.ndarray, p1_snap: tuple, L: int,
+                  batched: bool, ranked: list[np.ndarray] | None,
+                  validate: bool) -> State:
+    """Construction + improvement for one multi-start ordering."""
+    _, st = greedy_heuristic(inst, order=order, phase1_snapshot=p1_snap)
+    if batched:
+        _relocate_batched(st, L, validate)
+        _consolidate_batched(st, validate)
+    else:
         _relocate(st, L, ranked, validate)
         _consolidate(st, validate)
-        obj = state_objective(st)
-        if obj < best_obj - 1e-9:
-            best, best_obj = solution_from_state(inst, st), obj
-            stale = 0
+    return st
+
+
+# Fork-shared work description for the multi-start pool: set in the parent
+# immediately before the pool is created, inherited copy-on-write by the
+# forked workers (no per-task pickling of the Instance tensors).
+_FANOUT: dict = {}
+
+
+def _fanout_worker(idx: int):
+    inst = _FANOUT["inst"]
+    st = _run_ordering(inst, _FANOUT["orders"][idx],
+                       _FANOUT["p1"], _FANOUT["L"], _FANOUT["batched"],
+                       _FANOUT["ranked"], _FANOUT["validate"])
+    # Materialize through the one shared materializer so the parallel and
+    # sequential paths can never drift apart.
+    return (idx, state_objective(st), solution_from_state(inst, st))
+
+
+def _multi_start_parallel(inst: Instance, orders: list[np.ndarray],
+                          p1_snap: tuple, L: int, batched: bool,
+                          ranked: list[np.ndarray] | None, validate: bool,
+                          workers: int):
+    """Evaluate every ordering (no early stop) and reduce deterministically.
+
+    The reduction scans results in ordering-index order with the sequential
+    driver's strict-improvement rule, so the returned solution is identical
+    for any worker count — and never worse than the early-stop sequential
+    protocol, which evaluates a prefix of the same orderings."""
+    import multiprocessing as mp
+    if workers > 1 and (mp.current_process().daemon
+                        or "fork" not in mp.get_all_start_methods()):
+        workers = 1     # pool unavailable here; same protocol inline
+    _FANOUT.update(inst=inst, orders=orders, p1=p1_snap, L=L,
+                   batched=batched, ranked=ranked, validate=validate)
+    try:
+        if workers > 1:
+            import concurrent.futures as cf
+            from concurrent.futures.process import BrokenProcessPool
+            ctx = mp.get_context("fork")
+            try:
+                with cf.ProcessPoolExecutor(max_workers=workers,
+                                            mp_context=ctx) as ex:
+                    results = list(ex.map(_fanout_worker,
+                                          range(len(orders))))
+            except (OSError, BrokenProcessPool):
+                # Pool-infrastructure failure only (sandboxed spawn, killed
+                # worker): same protocol inline — the deterministic
+                # reduction makes the results identical.  Worker-side
+                # algorithm errors propagate unchanged.
+                results = [_fanout_worker(i) for i in range(len(orders))]
         else:
-            stale += 1
-            if stale >= patience:
-                break
+            results = [_fanout_worker(i) for i in range(len(orders))]
+    finally:
+        _FANOUT.clear()
+    results.sort(key=lambda r: r[0])
+    best, best_obj = None, np.inf
+    for idx, obj, sol in results:
+        if obj < best_obj - 1e-9:
+            best, best_obj = sol, obj
+    return best, best_obj
+
+
+def _auto_workers(inst: Instance, n_orders: int) -> int:
+    """Fan out only where it wins: large instances on boxes with enough
+    cores.  On <= 2 cores the pool's fork/IPC overhead plus the loss of
+    early stopping (the parallel protocol evaluates every ordering) beats
+    the speedup, measured end to end — so auto mode stays sequential
+    there and `workers=` remains an explicit opt-in."""
+    if inst.I * inst.J * inst.K < _PARALLEL_MIN_N:
+        return 0
+    cpus = os.cpu_count() or 1
+    return 0 if cpus < 4 else min(cpus, n_orders, 8)
+
+
+def agh(inst: Instance, R: int | None = None, L: int = 3, seed: int = 0,
+        patience: int = 5, validate: bool = False,
+        local_search: str = "batched",
+        workers: int | None = None) -> Solution:
+    """Adaptive Greedy Heuristic.
+
+    `local_search` picks the improvement engine: "batched" (default, the
+    scored-matrix engine over the full destination grid) or "reference"
+    (the first-improvement probe loop, bit-identical to the frozen scalar
+    seed path).  `workers` controls the multi-start driver: ``0`` forces
+    the sequential early-stop protocol, ``n >= 1`` evaluates every ordering
+    under the deterministic-reduction protocol (fanning out over ``n``
+    forked processes when ``n > 1``; results are independent of ``n``), and
+    ``None`` picks automatically — sequential below `_PARALLEL_MIN_N`,
+    fan-out above it.
+    """
+    t0 = time.perf_counter()
+    rng = np.random.default_rng(seed)
+    batched = local_search != "reference"
+    if R is None:
+        R = _adaptive_R(inst, batched=batched)
+    orders = _orderings(inst, R, rng)
+    # Phase 1 is ordering-independent: run it once and share the snapshot
+    # with every start (and every forked worker).
+    st0 = State.fresh(inst)
+    _phase1(st0)
+    p1_snap = state_snapshot(st0)
+    ranked = None if batched else _rank_inactive_targets(inst)
+    if workers is None:
+        workers = _auto_workers(inst, len(orders)) if batched else 0
+    if workers:
+        best, best_obj = _multi_start_parallel(
+            inst, orders, p1_snap, L, batched, ranked, validate, workers)
+    else:
+        best, best_obj = None, np.inf
+        stale = 0
+        for order in orders:
+            st = _run_ordering(inst, order, p1_snap, L, batched, ranked,
+                               validate)
+            obj = state_objective(st)
+            if obj < best_obj - 1e-9:
+                best, best_obj = solution_from_state(inst, st), obj
+                stale = 0
+            else:
+                stale += 1
+                if stale >= patience:
+                    break
     assert best is not None
     # Final check: the delta-maintained state must stand up to the full
     # constraint system (cheap — once per AGH call, not per move).

@@ -24,7 +24,8 @@ import numpy as np
 
 from .instance import Instance
 from .mechanisms import (State, commit, m3_upgrade, max_commit,
-                         max_commit_batch, rank_keys_all, solution_from_state)
+                         max_commit_batch, rank_keys_all, solution_from_state,
+                         state_restore)
 from .solution import Solution
 
 
@@ -86,62 +87,97 @@ def _phase2(st: State, order: np.ndarray) -> None:
         c_arr = np.where(active, st.cfg, c_inact)         # [J,K], -1 = none
         # Active pairs whose current config breaks the type's delay SLO
         # either get an M3 upgrade or (ablated) are routed to anyway.
-        if not no_m3:
-            d_cur = np.take_along_axis(
-                inst.D_cfg[i], np.maximum(c_arr, 0)[:, :, None],
-                axis=2)[:, :, 0]
-            viol = active & (c_arr >= 0) & (d_cur > inst.Delta[i])
-            for j, k in zip(*np.nonzero(viol)):
-                c2 = m3_upgrade(st, i, int(j), int(k))    # M3
+        jj, kk = np.nonzero(active)                       # j-major order
+        if not no_m3 and jj.size:
+            # Gather the few active cells' delays directly — the full
+            # [J,K] take_along_axis grid is pure overhead here.
+            d_act = inst.D_cfg[i, jj, kk, c_arr[jj, kk]]
+            for a in np.flatnonzero(d_act > inst.Delta[i]):
+                j, k = int(jj[a]), int(kk[a])
+                c2 = m3_upgrade(st, i, j, k)              # M3
                 c_arr[j, k] = -1 if c2 is None else c2
-        pi, kappa, valid = rank_keys_all(st, i, c_arr)    # M2 (batched)
+        # Per-pair delay of the candidate configs: precomputed M1 delays
+        # with the active cells overwritten (post-upgrade values; dead
+        # cells are masked by `valid` downstream).
+        if no_m1:
+            d_sel = None
+        else:
+            d_sel = inst.m1_delay[i].copy()
+            if jj.size:
+                d_sel[jj, kk] = inst.D_cfg[i, jj, kk,
+                                           np.maximum(c_arr[jj, kk], 0)]
+        pi, kappa, valid = rank_keys_all(st, i, c_arr, d_sel=d_sel)  # M2
         idx = np.flatnonzero(valid.ravel())
         if idx.size == 0:
             continue
         # Stable lexsort by (pi, kappa) keeps j-major scan order on ties —
         # identical to the scalar path's stable tuple sort.
         idx = idx[np.lexsort((kappa.ravel()[idx], pi.ravel()[idx]))]
-        # Commit caps for the whole ranked row come from one
-        # `max_commit_batch` pass instead of a scalar call per candidate.
-        # The batch is pure in the state, so it stays valid across skipped
-        # candidates and is recomputed only after a commit mutates the
-        # state (typically 1–2 commits per type vs J·K candidates).
-        caps = None
-        for flat in idx:
-            if st.r_rem[i] <= 1e-9:
-                break
+        # Commit caps: the scan almost always commits on the first ranked
+        # candidate and exhausts the type's demand, so the first few
+        # visited candidates use the O(1) scalar `max_commit` (identical
+        # arithmetic to the batch).  Only a pathological scan — many ranked
+        # candidates with zero cap — pays one `max_commit_batch` pass,
+        # after which dead candidates are skipped wholesale.
+        caps = live = None
+        probes = 0
+        p = 0
+        while p < idx.size and st.r_rem[i] > 1e-9:
+            flat = idx[p]
             j, k = int(flat) // K, int(flat) % K
             c = int(c_arr[j, k])
-            # Re-validate under the *current* state (the pair may have been
-            # upgraded while serving an earlier candidate of this type).
-            if st.q[j, k] > 0.5 and c != st.cfg[j, k] and inst.nm[c] <= st.y[j, k]:
+            # Re-validate under the *current* state (the pair may have
+            # been upgraded while serving an earlier candidate).
+            if (st.q[j, k] > 0.5 and c != st.cfg[j, k]
+                    and inst.nm[c] <= st.y[j, k]):
                 c_use = int(st.cfg[j, k])
                 if inst.D_cfg[i, j, k, c_use] > inst.Delta[i]:
+                    p += 1
                     continue
             else:
                 c_use = c
-            if c_use == c:
-                if caps is None:
-                    caps = max_commit_batch(st, i, c_arr)
-                cap = float(caps[j, k])
-            else:   # rare post-upgrade path: the row's config is stale here
+            if c_use != c:      # rare post-upgrade path: row config stale
                 cap = max_commit(st, i, j, k, c_use)
+            elif caps is not None:
+                cap = float(caps[j, k])
+            elif probes < 6:
+                cap = max_commit(st, i, j, k, c)
+                probes += 1
+            else:               # long dead scan: batch the rest of the row
+                caps = max_commit_batch(st, i, c_arr)
+                c_f = c_arr.ravel()[idx]
+                stale = ((st.q.ravel()[idx] > 0.5)
+                         & (c_f != st.cfg.ravel()[idx])
+                         & (inst.nm[c_f] <= st.y.ravel()[idx]))
+                live = np.flatnonzero(stale | (caps.ravel()[idx] > 1e-9))
+                cap = float(caps[j, k])
             frac = min(st.r_rem[i], cap)
             if frac <= 1e-9:
+                if live is None:
+                    p += 1
+                else:           # jump over batch-identified dead candidates
+                    nxt = live[np.searchsorted(live, p + 1):]
+                    p = int(nxt[0]) if nxt.size else idx.size
                 continue
             commit(st, i, j, k, c_use, frac)
-            caps = None
+            caps = live = None  # state changed: cached row caps invalid
+            probes = 0
+            p += 1
 
 
 def greedy_heuristic(inst: Instance, order: np.ndarray | None = None,
                      run_phase1: bool = True,
-                     ablation: frozenset = frozenset()
+                     ablation: frozenset = frozenset(),
+                     phase1_snapshot: tuple | None = None
                      ) -> tuple[Solution, State]:
     """Single-pass GH (Algorithm 1).
 
     `order` overrides the Phase-2 query ordering (used by AGH's
     multi-start); default is descending lambda.  `ablation` disables
-    mechanisms for the Table-3 study.
+    mechanisms for the Table-3 study.  Phase 1 is ordering-independent, so
+    AGH's multi-start runs it once and passes the resulting
+    `state_snapshot` as `phase1_snapshot` — restored here bit-identically
+    instead of being recomputed per ordering.
 
     Returns the materialized `Solution` together with the running `State`
     (whose arrays the Solution shares) so AGH's local search can continue
@@ -149,7 +185,9 @@ def greedy_heuristic(inst: Instance, order: np.ndarray | None = None,
     """
     t0 = time.perf_counter()
     st = State.fresh(inst, ablation=ablation)
-    if run_phase1:
+    if phase1_snapshot is not None:
+        state_restore(st, phase1_snapshot)
+    elif run_phase1:
         _phase1(st)
     if order is None:
         order = np.argsort(-inst.lam)

@@ -201,6 +201,30 @@ class Instance:
         self.budget_per_x = self.Delta_T * self.p_s * self.data_gb  # [I]
         # Config scan order for M3: ascending (nm, index).
         self.cfg_by_nm = np.lexsort((np.arange(C), self.nm))
+        # Gather support for the batched local-search engine: delay of the
+        # M1 winner per (i,j,k) (value at config 0 where infeasible — dead
+        # cells are always masked by the caller), a flat [J*K] index row,
+        # and a zero-copy [I, J*K, C] view of D_cfg.  Flat fancy gathers
+        # through these replace per-call `np.take_along_axis` grids, which
+        # dominate the per-move cost at local-search call rates.
+        self.m1_delay = np.take_along_axis(
+            self.D_cfg, np.maximum(self.cfg_m1, 0)[..., None],
+            axis=3)[..., 0]                                         # [I,J,K]
+        self.jk_idx = np.arange(J * K)
+        self.D_cfg_flat = self.D_cfg.reshape(I, J * K, C)
+        # Constant factors hoisted out of `max_commit_batch` /
+        # `rank_keys_all` — same operations on the same inputs, computed
+        # once per instance instead of per call (the per-op dispatch cost
+        # dominates at local-search call rates).
+        self.kv_gb_per_tok = self.beta / KB_PER_GB                  # [J]
+        self.comp_cap_coef = self.eta * 3600.0 * self.P_gpu         # [K]
+        self.p_s_B = self.p_s * self.B                              # [J]
+        self.e_bar_floor = np.maximum(self.e_bar, 1e-12)            # [I,J,K]
+        self.m1_feasible = self.cfg_m1 >= 0                         # [I,J,K]
+        # Incremental rental of activating a pair at its M1 winner for type
+        # i (0 GPUs where infeasible) — the inactive-destination branch of
+        # the relocate delta objective, hoisted to a per-instance tensor.
+        self.m1_rental = self.p_c[None, None, :] * self.m1_nm       # [I,J,K]
 
     # --- sizes ---------------------------------------------------------
     @property

@@ -153,20 +153,30 @@ def effective_coverage(st: State, i: int, j: int, k: int, c: int) -> float:
     return float(min(st.r_rem[i], err_cap, del_cap))
 
 
-def rank_keys_all(st: State, i: int, c_arr: np.ndarray
+def delay_sel(inst: Instance, i: int, c_arr: np.ndarray) -> np.ndarray:
+    """[J,K] delay of type i at each pair's selected config (config 0's
+    value where `c_arr` is -1; dead cells are the caller's problem).  A flat
+    fancy gather through `D_cfg_flat` — same values as the take_along_axis
+    it replaces at a fraction of the per-call cost."""
+    cc = np.maximum(c_arr, 0)
+    return inst.D_cfg_flat[i, inst.jk_idx, cc.ravel()].reshape(c_arr.shape)
+
+
+def rank_keys_all(st: State, i: int, c_arr: np.ndarray,
+                  d_sel: np.ndarray | None = None
                   ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
     """Batched M2 keys for type i over every (model, tier) pair at once.
 
-    `c_arr[J,K]` holds the candidate config per pair (-1 where none).
+    `c_arr[J,K]` holds the candidate config per pair (-1 where none);
+    `d_sel` optionally passes the already-gathered per-pair delay.
     Returns `(pi, kappa, valid)` arrays [J,K]; sorting valid candidates by
     (pi, kappa) with a stable sort reproduces the scalar candidate scan's
     ordering, including its j-major/k-minor tie-breaking."""
     inst = st.inst
     cc = np.maximum(c_arr, 0)
-    d = np.take_along_axis(inst.D_cfg[i], cc[:, :, None], axis=2)[:, :, 0]
-    e = inst.e_bar[i]
+    d = delay_sel(inst, i, c_arr) if d_sel is None else d_sel
     r_rem = float(st.r_rem[i])
-    err_cap = (inst.eps[i] - st.E_used[i]) / np.maximum(e, 1e-12)
+    err_cap = (inst.eps[i] - st.E_used[i]) / inst.e_bar_floor[i]
     del_cap = (inst.Delta[i] - st.D_used[i]) / np.maximum(d, 1e-12)
     if "no_m3" in st.ablation:
         del_cap = np.full_like(d, r_rem)
@@ -236,62 +246,167 @@ def max_commit(st: State, i: int, j: int, k: int, c: int) -> float:
     return max(0.0, float(cap))
 
 
-def max_commit_batch(st: State, i: int, c_arr: np.ndarray) -> np.ndarray:
+def max_commit_batch(st: State, i: int, c_arr: np.ndarray,
+                     d_sel: np.ndarray | None = None) -> np.ndarray:
     """`max_commit` for type i over every (j,k) pair at once.
 
     `c_arr[J,K]` gives the config per pair (-1 -> cap 0).  Pure in the
     state, so one batched evaluation replaces a row of scalar calls as long
-    as no commit happens in between — used by the consolidation
-    destination scan.  Elementwise arithmetic mirrors `max_commit` exactly.
+    as no commit happens in between — used by the batched relocate /
+    consolidation destination scans.  `d_sel` optionally passes the
+    already-gathered per-pair delay (`delay_sel`) so callers that need it
+    anyway don't pay the gather twice.  Elementwise arithmetic mirrors
+    `max_commit` exactly.
     """
     inst = st.inst
     cc = np.maximum(c_arr, 0)
-    nm = inst.nm[cc].astype(float)
-    d = np.take_along_axis(inst.D_cfg[i], cc[:, :, None], axis=2)[:, :, 0]
-    err_cap = (inst.eps[i] - st.E_used[i]) / np.maximum(inst.e_bar[i], 1e-12)
+    nm = inst.nm[cc]
+    d = delay_sel(inst, i, c_arr) if d_sel is None else d_sel
+    err_cap = (inst.eps[i] - st.E_used[i]) / inst.e_bar_floor[i]
     del_cap = (inst.Delta[i] - st.D_used[i]) / np.maximum(d, 1e-12)
     if "no_m3" in st.ablation:
         del_cap = np.full_like(d, float(st.r_rem[i]))
     cap = np.minimum(np.minimum(float(st.r_rem[i]), err_cap), del_cap)
     dead = c_arr < 0
+    zm = st.z[i] < 0.5
     with np.errstate(divide="ignore", invalid="ignore"):
         # (8f)
         if "no_m1" not in st.ablation:
             b_dev = inst.B_eff / nm
-            head_gb = inst.C_gpu[None, :] - b_dev \
-                - (inst.beta[:, None] / KB_PER_GB) / nm * st.kv_tok
-            per_x = (inst.beta[:, None] / KB_PER_GB) / nm \
-                * inst.kv_tok_per_x[i]
+            kvd = inst.kv_gb_per_tok[:, None] / nm
+            head_gb = inst.C_gpu[None, :] - b_dev - kvd * st.kv_tok
+            per_x = kvd * inst.kv_tok_per_x[i]
             kv = inst.kv_applicable[:, None]
             has_px = per_x > 1e-18
-            cap = np.where(kv & has_px,
-                           np.minimum(cap, head_gb / np.where(has_px, per_x, 1.0)),
+            # Unguarded divide: per_x == 0 cells produce inf/nan but are
+            # never selected by the mask (errstate silences the warning).
+            cap = np.where(kv & has_px, np.minimum(cap, head_gb / per_x),
                            cap)
             dead |= kv & ~has_px & (head_gb < 0)
             dead |= ~kv & (inst.C_gpu[None, :] - b_dev < 0)
         # (8g)
-        comp_cap = inst.eta * 3600.0 * inst.P_gpu[None, :] * nm
         per_x = inst.load_per_x[i]
         has_px = per_x > 1e-18
         cap = np.where(has_px,
-                       np.minimum(cap, (comp_cap - st.load)
-                                  / np.where(has_px, per_x, 1.0)),
+                       np.minimum(cap, (inst.comp_cap_coef[None, :] * nm
+                                        - st.load) / per_x),
                        cap)
         # (8h)
-        new_weight = np.where(st.z[i] < 0.5, inst.B[:, None], 0.0)
+        new_weight = np.where(zm, inst.B[:, None], 0.0)
         if inst.data_gb[i] > 1e-18:
             cap = np.minimum(cap, (inst.C_s - st.stor_used[i] - new_weight)
                              / inst.data_gb[i])
         # budget (8c)
-        inc_gpus = np.maximum(0.0, inst.nm[cc] - st.y)
+        inc_gpus = np.maximum(0.0, nm - st.y)
         fixed = inst.Delta_T * (inst.p_c[None, :] * inc_gpus
-                                + np.where(st.z[i] < 0.5,
-                                           inst.p_s * inst.B[:, None], 0.0))
+                                + np.where(zm, inst.p_s_B[:, None], 0.0))
         dead |= st.spend + fixed > inst.delta
         if inst.budget_per_x[i] > 1e-18:
             cap = np.minimum(cap, (inst.delta - st.spend - fixed)
                              / inst.budget_per_x[i])
     return np.where(dead, 0.0, np.maximum(0.0, cap))
+
+
+@dataclasses.dataclass
+class MoveScores:
+    """Scored relocate destinations for one (i, j, k) source cell.
+
+    Produced by `score_moves_batch`; `obj_after[j2,k2]` is the objective of
+    the solution after moving the full fraction to (j2,k2) (`inf` where the
+    move is inadmissible), `caps` the destination's (8c)-(8h) commit cap,
+    `c_dest` the config the move would commit at, and `obj_removed` the
+    objective of the intermediate source-removed state."""
+    i: int
+    j: int
+    k: int
+    frac: float
+    c_dest: np.ndarray      # [J,K]
+    caps: np.ndarray        # [J,K]
+    admissible: np.ndarray  # [J,K] bool
+    obj_after: np.ndarray   # [J,K]
+    obj_removed: float
+
+
+def score_moves_batch(st: State, i: int, j: int, k: int,
+                      improve_below: float | None = None) -> MoveScores:
+    """Score moving all of x[i,j,k] to every destination (j2,k2) at once.
+
+    One pass replaces the scalar probe-per-destination loop: config
+    selection (active pairs route at their current config, inactive pairs
+    at the M1 winner), the delay/M1 admissibility masks, one
+    `max_commit_batch` cap evaluation, and the vectorized delta objective
+    of `commit_delta_batch`.  Admissibility and caps agree with sequential
+    `_try_move` probing cell-for-cell (pinned by the property suite); the
+    state is restored exactly before returning.
+
+    With `improve_below`, destinations whose post-move objective is not
+    strictly under the bound are filtered from `admissible` *before* the
+    cap evaluation — the scan's fast path: a converged source pays only
+    the delta arithmetic (caps stay zero, `obj_after` stays inf) and the
+    expensive (8c)-(8h) pass runs only when an improving candidate exists.
+    """
+    inst = st.inst
+    undo: list = []
+    frac = remove_assignment(st, i, j, k, undo=undo)
+    # Destination configs/delays: the precomputed M1 winner everywhere,
+    # overwritten on the (few) active cells with the pair's own config.
+    jj, kk = np.nonzero(st.q > 0.5)
+    c_act = st.cfg[jj, kk]
+    c_dest = inst.cfg_m1[i].copy()
+    c_dest[jj, kk] = c_act
+    d_sel = inst.m1_delay[i].copy()
+    d_act = inst.D_cfg[i, jj, kk, c_act]
+    d_sel[jj, kk] = d_act
+    ok = inst.m1_feasible[i].copy()
+    ok[jj, kk] = d_act <= inst.Delta[i]
+    ok[j, k] = False
+    obj0 = state_objective(st)
+    # Delta objective of committing `frac` at each destination, mirroring
+    # `commit` + `state_objective`: incremental rental (active pairs run at
+    # their own config, so only fresh activations rent GPUs — the
+    # precomputed M1 rental with active cells zeroed), first-admission
+    # model storage, per-fraction data storage, routed delay, and the
+    # absorbed unmet penalty (a destination-independent scalar).
+    rental = inst.m1_rental[i].copy()
+    rental[jj, kk] = 0.0
+    rr = float(st.r_rem[i])
+    d_unmet = max(rr - frac, 0.0) - max(rr, 0.0)
+    obj_after = (obj0 + inst.Delta_T * inst.phi[i] * d_unmet
+                 + inst.Delta_T * (rental
+                                   + np.where(st.z[i] < 0.5,
+                                              inst.p_s_B[:, None], 0.0)
+                                   + inst.p_s * inst.data_gb[i] * frac)
+                 + inst.rho[i] * d_sel * 1e3 * frac)
+    if improve_below is not None:
+        ok &= obj_after < improve_below
+        n_ok = int(np.count_nonzero(ok))
+        if n_ok == 0:
+            undo_all(st, undo)
+            return MoveScores(i=i, j=j, k=k, frac=frac, c_dest=c_dest,
+                              caps=np.zeros_like(d_sel), admissible=ok,
+                              obj_after=np.full_like(d_sel, np.inf),
+                              obj_removed=obj0)
+        if n_ok <= 6:
+            # Few surviving candidates: O(1) scalar caps (identical
+            # arithmetic) beat the full-grid batch pass.
+            caps = np.zeros_like(d_sel)
+            K = c_dest.shape[1]
+            for f in np.flatnonzero(ok.ravel()):
+                j2, k2 = int(f) // K, int(f) % K
+                caps[j2, k2] = max_commit(st, i, j2, k2,
+                                          int(c_dest[j2, k2]))
+            adm = ok & (caps >= frac - 1e-9)
+            obj_after = np.where(adm, obj_after, np.inf)
+            undo_all(st, undo)
+            return MoveScores(i=i, j=j, k=k, frac=frac, c_dest=c_dest,
+                              caps=caps, admissible=adm,
+                              obj_after=obj_after, obj_removed=obj0)
+    caps = max_commit_batch(st, i, np.where(ok, c_dest, -1), d_sel=d_sel)
+    adm = ok & (caps >= frac - 1e-9)
+    obj_after = np.where(adm, obj_after, np.inf)
+    undo_all(st, undo)
+    return MoveScores(i=i, j=j, k=k, frac=frac, c_dest=c_dest, caps=caps,
+                      admissible=adm, obj_after=obj_after, obj_removed=obj0)
 
 
 def commit(st: State, i: int, j: int, k: int, c: int, frac: float,

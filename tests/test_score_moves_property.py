@@ -1,0 +1,62 @@
+"""Hypothesis property tests for `score_moves_batch` (PR-3).
+
+On ANY randomly generated instance and its GH construction state, the
+scored move matrix must agree with sequential `_try_move`-style probing:
+same admissible destination set, same commit caps, same post-move
+objectives at 1e-9 — and the lazy `improve_below` path must be exactly the
+full scan filtered by the improvement bound.  The shared scalar oracle
+lives in `tests/test_local_search_batched.py`, which also runs it
+deterministically on the fixed instance suite (this file is skipped where
+hypothesis is unavailable).
+"""
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.core import agh, is_feasible, random_instance
+from repro.core.gh import greedy_heuristic
+from repro.core.mechanisms import score_moves_batch, state_objective
+
+from test_local_search_batched import (assert_scores_match_probing,
+                                       sources_of)
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(3, 8), st.integers(3, 6), st.integers(4, 10),
+       st.integers(0, 10_000))
+def test_score_moves_batch_matches_sequential_probing(I, J, K, seed):
+    inst = random_instance(I, J, K, seed=seed)
+    _, state = greedy_heuristic(inst)
+    for (i, j, k) in sources_of(state)[:8]:
+        assert_scores_match_probing(state, i, j, k)
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(3, 8), st.integers(3, 6), st.integers(4, 10),
+       st.integers(0, 10_000))
+def test_score_moves_batch_improve_below_filter(I, J, K, seed):
+    """The lazy path (including its scalar-caps branch for few surviving
+    candidates) reports exactly the full scan's admissible set
+    intersected with the improvement bound."""
+    inst = random_instance(I, J, K, seed=seed)
+    _, state = greedy_heuristic(inst)
+    obj = state_objective(state)
+    for (i, j, k) in sources_of(state)[:6]:
+        full = score_moves_batch(state, i, j, k)
+        lazy = score_moves_batch(state, i, j, k, improve_below=obj - 1e-9)
+        want = full.admissible & (full.obj_after < obj - 1e-9)
+        assert np.array_equal(lazy.admissible, want)
+        assert np.allclose(lazy.obj_after[want], full.obj_after[want],
+                           atol=0, rtol=1e-12)
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(3, 8), st.integers(3, 6), st.integers(4, 10),
+       st.integers(0, 10_000))
+def test_batched_agh_feasible_on_random_instances(I, J, K, seed):
+    inst = random_instance(I, J, K, seed=seed)
+    sol = agh(inst)
+    assert is_feasible(inst, sol, enforce_zeta=False)
+    assert sol.u.max() <= 1.0 + 1e-9

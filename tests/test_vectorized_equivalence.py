@@ -85,10 +85,11 @@ def test_gh_ablations_match_scalar_reference(ablation):
     ("stressed-1.15", default_instance().stressed(1.15)),
 ])
 def test_agh_matches_scalar_reference(name, inst):
-    """Full AGH pipeline (multi-start + relocate + consolidate): the
-    delta-move engine must land on the scalar reference's solution."""
+    """Full AGH pipeline (multi-start + relocate + consolidate) in
+    `local_search="reference"` mode: the delta-move engine must land on
+    the scalar reference's solution bit-for-bit."""
     sol_ref = ref.agh_scalar(inst)
-    sol_vec = agh(inst, validate=True)
+    sol_vec = agh(inst, local_search="reference", validate=True)
     _assert_same_solution(inst, sol_vec, sol_ref, f"AGH/{name}")
     assert is_feasible(inst, sol_vec, enforce_zeta=False)
 
