@@ -1,18 +1,22 @@
 """Allocator scaling: before/after rows for the vectorized engine.
 
-Three points per size and method so both engine generations are visible in
-CI logs:
+Up to four points per size and method so every engine generation is
+visible in CI logs:
 
 * ``before``   — the frozen scalar seed path (`_scalar_ref`, pre-PR-1);
 * ``ref``      — AGH with ``local_search="reference"`` (the PR-1/PR-2
                  vectorized engine with the first-improvement probe loop);
-* ``after``    — the PR-3 batched engine (scored move matrices, batched
-                 drains, raised multi-start budgets).
+* ``rescan``   — the PR-3-style batched engine with dirty-source tracking
+                 disabled (``local_search="batched-rescan"``);
+* ``after``    — the PR-4 incremental engine (amortized destination
+                 tensors + dirty-source tracking, the default).
 
 Emits one ``name,us_per_call`` row per (size, method, path) so perf
-regressions show up directly in CI logs.  The scalar paths are capped at
-sizes where they finish in seconds; for larger sizes only the vectorized
-rows are emitted (the scalar cost is the reason the engine exists).
+regressions show up directly in CI logs, and returns row dicts carrying
+the objectives — `benchmarks/check_regression.py` diffs those against the
+committed baseline.  The scalar/reference paths are capped at sizes where
+they finish in seconds; for larger sizes only the fast rows are emitted
+(the scalar cost is the reason the engine exists).
 """
 from __future__ import annotations
 
@@ -23,13 +27,18 @@ from .common import Timer, emit
 
 SIZES = [(6, 6, 10), (10, 10, 10), (15, 15, 10), (20, 20, 20), (30, 30, 20),
          (40, 40, 30), (60, 60, 40)]
+# Beyond-paper sizes: the PR-4 acceptance instance plus two fleet-scale
+# points (the paper's Table 6 stops at (20,20,20)).
+SIZES_XL = SIZES + [(100, 80, 40), (150, 120, 60), (200, 160, 80)]
 QUICK_SIZES = [(6, 6, 10), (20, 20, 20)]
 SCALAR_AGH_MAX = 10 * 10 * 10   # scalar AGH above this takes minutes
 SCALAR_GH_MAX = 30 * 30 * 20    # scalar GH above this takes tens of seconds
+REF_AGH_MAX = 100 * 80 * 40     # reference-mode AGH above this: minutes
 
 
 def run(sizes=SIZES, scalar_agh_max: int = SCALAR_AGH_MAX,
-        scalar_gh_max: int = SCALAR_GH_MAX) -> list[dict]:
+        scalar_gh_max: int = SCALAR_GH_MAX,
+        ref_agh_max: int = REF_AGH_MAX) -> list[dict]:
     rows = []
     for (I, J, K) in sizes:
         inst = random_instance(I, J, K, seed=42)
@@ -46,7 +55,8 @@ def run(sizes=SIZES, scalar_agh_max: int = SCALAR_AGH_MAX,
         with Timer() as t:
             g_vec = gh(inst)
         row["GH_after_us"] = t.us
-        derived = f"obj={objective(inst, g_vec):.2f}"
+        row["GH_obj"] = round(objective(inst, g_vec), 4)
+        derived = f"obj={row['GH_obj']:.2f}"
         if "GH_before_us" in row:
             derived += f";speedup={row['GH_before_us'] / max(t.us, 1e-9):.1f}x"
         emit(f"allocator_scaling.{size}.GH.after", t.us, derived)
@@ -58,17 +68,28 @@ def run(sizes=SIZES, scalar_agh_max: int = SCALAR_AGH_MAX,
             emit(f"allocator_scaling.{size}.AGH.before", t.us,
                  f"obj={objective(inst, a_ref):.2f}")
 
+        if I * J * K <= ref_agh_max:
+            with Timer() as t:
+                a_mode_ref = agh(inst, local_search="reference")
+            row["AGH_ref_us"] = t.us
+            row["AGH_ref_obj"] = round(objective(inst, a_mode_ref), 4)
+            emit(f"allocator_scaling.{size}.AGH.ref", t.us,
+                 f"obj={row['AGH_ref_obj']:.2f}")
+
         with Timer() as t:
-            a_mode_ref = agh(inst, local_search="reference")
-        row["AGH_ref_us"] = t.us
-        emit(f"allocator_scaling.{size}.AGH.ref", t.us,
-             f"obj={objective(inst, a_mode_ref):.2f}")
+            a_rescan = agh(inst, local_search="batched-rescan")
+        row["AGH_rescan_us"] = t.us
+        row["AGH_rescan_obj"] = round(objective(inst, a_rescan), 4)
+        emit(f"allocator_scaling.{size}.AGH.rescan", t.us,
+             f"obj={row['AGH_rescan_obj']:.2f}")
 
         with Timer() as t:
             a_vec = agh(inst)
         row["AGH_after_us"] = t.us
-        derived = (f"obj={objective(inst, a_vec):.2f};"
-                   f"ls_speedup={row['AGH_ref_us'] / max(t.us, 1e-9):.1f}x")
+        row["AGH_obj"] = round(objective(inst, a_vec), 4)
+        derived = f"obj={row['AGH_obj']:.2f}"
+        if "AGH_ref_us" in row:
+            derived += f";ls_speedup={row['AGH_ref_us'] / max(t.us, 1e-9):.1f}x"
         if "AGH_before_us" in row:
             derived += f";speedup={row['AGH_before_us'] / max(t.us, 1e-9):.1f}x"
         emit(f"allocator_scaling.{size}.AGH.after", t.us, derived)
@@ -81,8 +102,11 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="smallest + acceptance size only (CI smoke)")
+    ap.add_argument("--xl", action="store_true",
+                    help="include the beyond-paper sizes up to (200,160,80)")
     ap.add_argument("--scalar-agh-max", type=int, default=SCALAR_AGH_MAX,
                     help="largest I*J*K for which the scalar AGH is timed")
     args = ap.parse_args()
-    run(sizes=QUICK_SIZES if args.quick else SIZES,
+    run(sizes=(QUICK_SIZES if args.quick else
+               (SIZES_XL if args.xl else SIZES)),
         scalar_agh_max=args.scalar_agh_max)

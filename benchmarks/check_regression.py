@@ -1,0 +1,184 @@
+"""CI benchmark-regression gate.
+
+Diffs fresh ``benchmarks.run --json`` dumps against the committed baseline
+(`benchmarks/baselines/ci_baseline.json`) and fails the job when the
+allocator regresses:
+
+* **objectives are exact** (relative tolerance ``--objective-rtol``,
+  default 1e-6 — enough for cross-BLAS last-ulp noise, far below any real
+  quality regression): every ``*_obj`` key of every baseline row must
+  match the fresh value.  DM columns are excluded — the exact solver runs
+  under a wall-clock limit, so its incumbent (and the AGH gap against it)
+  is machine-dependent by construction;
+* **runtimes get a generous factor** (``--runtime-factor``, default 5x):
+  every ``*_s`` / ``*_us`` key may drift with machine speed but not blow
+  past ``baseline * factor`` — catching order-of-magnitude engine
+  regressions without flaking on CI hardware variance.  Rows whose
+  baseline runtime is below ``--runtime-floor`` (10 ms) are skipped:
+  sub-jitter timings would gate on scheduler noise, not on the engine;
+* **stale baselines are rejected**: the baseline and every fresh dump
+  must carry the current ``JSON_SCHEMA_VERSION`` (bumped whenever the row
+  layout changes), so the gate never silently "passes" by comparing
+  incompatible shapes.  Each dump also records its git SHA for
+  provenance, printed in the report.
+
+Usage (CI runs this after the benchmark smoke steps)::
+
+    python -m benchmarks.check_regression \
+        bench-out/table6.json bench-out/allocator_scaling.json
+
+Exit code 0 = no regression, 1 = regression or malformed input.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+from .common import JSON_SCHEMA_VERSION
+
+DEFAULT_BASELINE = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                "baselines", "ci_baseline.json")
+# DM is an anytime MILP under a time limit: its incumbent objective and
+# the AGH gap derived from it vary with machine speed — never gated.
+SKIP_KEY_PREFIXES = ("DM_", "AGH_gap")
+
+
+def _is_runtime_key(key: str) -> bool:
+    return key.endswith("_s") or key.endswith("_us")
+
+
+def _is_objective_key(key: str) -> bool:
+    return key.endswith("_obj")
+
+
+def _runtime_seconds(key: str, val: float) -> float:
+    return val / 1e6 if key.endswith("_us") else val
+
+
+def check(baseline: dict, fresh_sections: dict, objective_rtol: float,
+          runtime_factor: float, runtime_floor_s: float = 0.01) -> list[str]:
+    """Returns a list of human-readable failure strings (empty = pass)."""
+    failures: list[str] = []
+    for section, base_rows in baseline["sections"].items():
+        fresh_rows = fresh_sections.get(section)
+        if fresh_rows is None:
+            failures.append(f"{section}: section missing from fresh output")
+            continue
+        if isinstance(fresh_rows, dict) and "error" in fresh_rows:
+            failures.append(f"{section}: fresh run errored: "
+                            f"{fresh_rows['error']}")
+            continue
+        fresh_by_size = {r.get("size"): r for r in fresh_rows}
+        for base_row in base_rows:
+            size = base_row.get("size")
+            fresh = fresh_by_size.get(size)
+            if fresh is None:
+                failures.append(f"{section} {size}: row missing")
+                continue
+            for key, base_val in base_row.items():
+                if key == "size" or key.startswith(SKIP_KEY_PREFIXES):
+                    continue
+                if not isinstance(base_val, (int, float)):
+                    continue
+                val = fresh.get(key)
+                if not isinstance(val, (int, float)):
+                    failures.append(
+                        f"{section} {size} {key}: missing/non-numeric "
+                        f"(baseline {base_val})")
+                    continue
+                if _is_objective_key(key):
+                    tol = objective_rtol * max(1.0, abs(base_val))
+                    if abs(val - base_val) > tol:
+                        failures.append(
+                            f"{section} {size} {key}: objective "
+                            f"{val} != baseline {base_val} "
+                            f"(rtol {objective_rtol})")
+                elif _is_runtime_key(key):
+                    if _runtime_seconds(key, base_val) < runtime_floor_s:
+                        continue    # sub-jitter row: noise, not signal
+                    if val > base_val * runtime_factor:
+                        failures.append(
+                            f"{section} {size} {key}: runtime {val} > "
+                            f"{runtime_factor}x baseline {base_val}")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("fresh", nargs="+",
+                    help="fresh benchmarks.run --json dumps to gate")
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE)
+    ap.add_argument("--objective-rtol", type=float, default=1e-6)
+    ap.add_argument("--runtime-factor", type=float, default=5.0)
+    ap.add_argument("--runtime-floor", type=float, default=0.01,
+                    help="skip runtime checks on rows whose baseline is "
+                         "under this many seconds (scheduler noise)")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="regenerate the baseline from the fresh dumps "
+                         "instead of checking against it")
+    args = ap.parse_args(argv)
+
+    if args.write_baseline:
+        sections: dict = {}
+        sha = "unknown"
+        for path in args.fresh:
+            with open(path) as fh:
+                dump = json.load(fh)
+            sha = dump.get("git_sha", sha)
+            for name, rows in dump.get("sections", {}).items():
+                if isinstance(rows, list):
+                    sections[name] = rows
+        payload = {"schema_version": JSON_SCHEMA_VERSION,
+                   "source_git_sha": sha, "sections": sections}
+        os.makedirs(os.path.dirname(args.baseline), exist_ok=True)
+        with open(args.baseline, "w") as fh:
+            json.dump(payload, fh, indent=2)
+            fh.write("\n")
+        print(f"# wrote baseline {args.baseline} "
+              f"({sum(len(v) for v in sections.values())} rows)", flush=True)
+        return 0
+
+    with open(args.baseline) as fh:
+        baseline = json.load(fh)
+    if baseline.get("schema_version") != JSON_SCHEMA_VERSION:
+        print(f"REGRESSION GATE: stale baseline — schema_version "
+              f"{baseline.get('schema_version')} != current "
+              f"{JSON_SCHEMA_VERSION}; regenerate "
+              f"benchmarks/baselines/ci_baseline.json", flush=True)
+        return 1
+
+    fresh_sections: dict = {}
+    for path in args.fresh:
+        with open(path) as fh:
+            dump = json.load(fh)
+        if dump.get("schema_version") != JSON_SCHEMA_VERSION:
+            print(f"REGRESSION GATE: {path} carries schema_version "
+                  f"{dump.get('schema_version')} != current "
+                  f"{JSON_SCHEMA_VERSION}", flush=True)
+            return 1
+        print(f"# {path}: git {dump.get('git_sha', 'unknown')[:12]}, "
+              f"sections {sorted(dump.get('sections', {}))}", flush=True)
+        fresh_sections.update(dump.get("sections", {}))
+    print(f"# baseline: {args.baseline} "
+          f"(source git {baseline.get('source_git_sha', 'unknown')[:12]})",
+          flush=True)
+
+    failures = check(baseline, fresh_sections,
+                     objective_rtol=args.objective_rtol,
+                     runtime_factor=args.runtime_factor,
+                     runtime_floor_s=args.runtime_floor)
+    if failures:
+        print(f"REGRESSION GATE: {len(failures)} failure(s)", flush=True)
+        for f in failures:
+            print(f"  FAIL {f}", flush=True)
+        return 1
+    n_rows = sum(len(v) for v in baseline["sections"].values())
+    print(f"REGRESSION GATE: OK ({n_rows} baseline rows checked)",
+          flush=True)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

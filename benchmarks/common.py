@@ -1,7 +1,41 @@
 """Shared helpers for the per-table benchmarks."""
 from __future__ import annotations
 
+import os
+import subprocess
 import time
+
+# JSON dump schema, bumped whenever the row-dict layout changes in a way
+# the regression gate must not silently accept (see check_regression.py).
+JSON_SCHEMA_VERSION = 2
+
+_made_dirs: set[str] = set()
+
+
+def ensure_outdir(path: str) -> None:
+    """Create the directory holding `path` exactly once per process —
+    repeated `--json` dumps (one per section invocation in CI) share the
+    memo instead of re-running makedirs."""
+    d = os.path.dirname(os.path.abspath(path))
+    if d in _made_dirs:
+        return
+    os.makedirs(d, exist_ok=True)
+    _made_dirs.add(d)
+
+
+def git_sha() -> str:
+    """Current commit SHA (`unknown` outside a work tree) — stamped into
+    every JSON dump so the CI gate can reject stale baselines."""
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
+            timeout=10,
+            cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+        if out.returncode == 0:
+            return out.stdout.strip()
+    except (OSError, subprocess.SubprocessError):
+        pass
+    return "unknown"
 
 
 def emit(name: str, us_per_call: float, derived: str) -> None:

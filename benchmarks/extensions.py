@@ -11,8 +11,6 @@ ext3 — closed-loop validation: discrete-event simulation of the planned
 """
 from __future__ import annotations
 
-import numpy as np
-
 from repro.core import agh, default_instance, gh, provisioning_cost
 from repro.core.queueing import (slo_attainment_with_queueing,
                                  with_queueing_margin)

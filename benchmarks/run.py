@@ -54,7 +54,8 @@ def main(argv=None) -> int:
                    else (table6.SIZES_EXT if args.full else table6.SIZES))),
         "allocator_scaling": lambda: allocator_scaling.run(
             sizes=(allocator_scaling.QUICK_SIZES if args.quick
-                   else allocator_scaling.SIZES)),
+                   else (allocator_scaling.SIZES_XL if args.full
+                         else allocator_scaling.SIZES))),
         "stage2_scaling": lambda: stage2_scaling.run(
             quick=args.quick, S=(500 if args.full else 120)),
         "figs": lambda: figs.run(S=max(20, S // 4)),
@@ -80,10 +81,16 @@ def main(argv=None) -> int:
     if args.json:
         import json
 
-        os.makedirs(os.path.dirname(os.path.abspath(args.json)),
-                    exist_ok=True)
+        from .common import JSON_SCHEMA_VERSION, ensure_outdir, git_sha
+
+        ensure_outdir(args.json)
+        payload = {
+            "schema_version": JSON_SCHEMA_VERSION,
+            "git_sha": git_sha(),
+            "sections": collected,
+        }
         with open(args.json, "w") as fh:
-            json.dump(collected, fh, indent=2, default=str)
+            json.dump(payload, fh, indent=2, default=str)
         print(f"# wrote {args.json}", flush=True)
     print(f"# benchmarks done in {time.time()-t0:.0f}s", flush=True)
     return 0

@@ -9,7 +9,7 @@ from repro.core import agh, default_instance, gh, solve_milp
 from repro.core.rolling import rolling
 from repro.core.trace import random_walk_lambdas
 
-from .common import Timer, emit
+from .common import emit
 
 SIGMAS = (0.01, 0.02, 0.03, 0.04, 0.05)
 

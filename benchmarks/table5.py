@@ -9,7 +9,7 @@ from repro.core import agh, default_instance, dvr, gh, hf, lpr, solve_milp
 from repro.core.rolling import rolling
 from repro.core.trace import diurnal_multipliers, peak_to_trough
 
-from .common import Timer, emit
+from .common import emit
 
 
 def run(n_windows: int = 288, day: str = "busy", dm_limit: float = 120.0,

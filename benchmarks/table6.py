@@ -17,8 +17,11 @@ skips it above (at (15,15,10) the paper already reports >600 s; the CLI's
 ``benchmarks.run --full``).  Skipped rows show ``DM_s = skipped(>size)``.
 
 ``SIZES_EXT`` (CLI ``--ext``) pushes past the paper's largest instance:
-(30,30,20) from PR 1 plus the PR-3 beyond-paper sizes (40,40,30),
-(60,60,40) and (100,80,40)."""
+(30,30,20) from PR 1, the PR-3 beyond-paper sizes (40,40,30), (60,60,40)
+and (100,80,40), and the PR-4 fleet-scale points (150,120,60) and
+(200,160,80).  ``local_search="reference"`` timing is capped at
+`REF_AGH_MAX` — beyond (100,80,40) the first-improvement engine takes
+minutes and the incremental engine is the only practical path."""
 from __future__ import annotations
 
 from repro.core import agh, gh, objective, random_instance, solve_milp
@@ -27,9 +30,11 @@ from repro.core._scalar_ref import gh_scalar
 from .common import Timer, emit
 
 SIZES = [(4, 4, 5), (6, 6, 10), (10, 10, 10), (15, 15, 10), (20, 20, 20)]
-SIZES_EXT = SIZES + [(30, 30, 20), (40, 40, 30), (60, 60, 40), (100, 80, 40)]
+SIZES_EXT = SIZES + [(30, 30, 20), (40, 40, 30), (60, 60, 40), (100, 80, 40),
+                     (150, 120, 60), (200, 160, 80)]
 DM_MAX_SIZE = 1000              # unified default: DM through (10,10,10)
 SCALAR_GH_MAX = 30 * 30 * 20    # frozen scalar GH beyond this: minutes
+REF_AGH_MAX = 100 * 80 * 40     # reference-mode AGH beyond this: minutes
 
 
 def run(dm_limit: float = 600.0, dm_max_size: int = DM_MAX_SIZE,
@@ -40,6 +45,7 @@ def run(dm_limit: float = 600.0, dm_max_size: int = DM_MAX_SIZE,
         row = dict(size=f"({I},{J},{K})")
         g = gh(inst)
         row["GH_s"] = round(g.runtime_s, 3)
+        row["GH_obj"] = round(objective(inst, g), 1)
         if include_before and I * J * K <= SCALAR_GH_MAX:
             with Timer() as t:
                 gh_scalar(inst)
@@ -47,7 +53,7 @@ def run(dm_limit: float = 600.0, dm_max_size: int = DM_MAX_SIZE,
         a = agh(inst)
         row["AGH_s"] = round(a.runtime_s, 3)
         row["AGH_obj"] = round(objective(inst, a), 1)
-        if include_before:
+        if include_before and I * J * K <= REF_AGH_MAX:
             a_ref = agh(inst, local_search="reference")
             row["AGH_ref_s"] = round(a_ref.runtime_s, 3)
         if I * J * K <= dm_max_size:

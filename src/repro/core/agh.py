@@ -45,11 +45,11 @@ import numpy as np
 
 from .gh import _phase1, greedy_heuristic
 from .instance import Instance
-from .mechanisms import (State, commit, deactivate_pair, delay_sel,
-                         max_commit, max_commit_batch, remove_assignment,
-                         score_moves_batch, solution_from_state,
-                         state_objective, state_restore, state_snapshot,
-                         undo_all)
+from .mechanisms import (DestCache, State, commit, deactivate_pair,
+                         delay_sel, max_commit, max_commit_batch,
+                         remove_assignment, score_moves_batch,
+                         solution_from_state, state_objective, state_restore,
+                         state_snapshot, undo_all)
 from .solution import Solution, is_feasible, objective
 
 
@@ -252,26 +252,69 @@ def _consolidate(st: State, validate: bool) -> None:
 
 
 # ---------------------------------------------------------------------------
-# Batched local search (scored move matrices, best-improvement)
+# Batched local search (scored move matrices, best-improvement, incremental)
 # ---------------------------------------------------------------------------
 
-def _relocate_batched(st: State, L: int, validate: bool) -> None:
+def _invalidate_sources(clean: set, types, cells: set) -> None:
+    """Drop every clean-source mark whose score inputs an applied move may
+    have touched: all sources of the moved types (their type-local scalars
+    — r_rem, E/D_used, stor_used, z row — shifted) and all sources sitting
+    on a touched pair whose removal economics changed (`cells` — the
+    callers pass pairs left with a single traffic type, whose survivor
+    gains the deactivation refund, and drained/deactivated pairs).
+    Destination-side reveals — capacity freed on a touched pair making
+    someone else's move into it viable — are deliberately NOT tracked
+    here; the verification rescan at the fixed point catches them."""
+    tset = types if isinstance(types, set) else {types}
+    stale = [s for s in clean if s[0] in tset or (s[1], s[2]) in cells]
+    clean.difference_update(stale)
+
+
+def _relocate_batched(st: State, L: int, validate: bool,
+                      cache: DestCache | None = None,
+                      clean: set | None = None,
+                      fallback: bool = True) -> bool:
     """Relocate via `score_moves_batch`: per source cell, every destination
     is scored in one pass and the best strictly-improving move is applied.
     Scans the full (j',k') grid (the paper's scan), not the reference
-    path's active-pairs-plus-3 shortlist."""
+    path's active-pairs-plus-3 shortlist.
+
+    With `clean` (the dirty-source protocol), sources that failed to
+    improve stay skipped until an applied move touches their score inputs
+    (`_invalidate_sources`); a sweep that found no improving move among
+    the dirty sources clears the set and rescans everything (`fallback`;
+    `_improve_batched` disables it per call and runs one shared
+    verification rescan at the joint relocate/consolidate fixed point
+    instead), so the search never declares convergence on stale marks —
+    an improving move can be deferred by the approximate invalidation
+    rule, never missed.  The improvement test itself is
+    threshold-independent (a move improves iff its own delta is negative),
+    so marks taken against an older, higher objective stay valid as the
+    objective descends.  `L` caps the number of improving sweeps,
+    mirroring the fixed-pass engine's bound; rescans that find nothing are
+    free.  Returns whether any move was applied."""
     inst = st.inst
     K = inst.K
-    for _ in range(L):
+    track = clean is not None
+    improving = 0
+    any_improved = False
+    while True:
         improved = False
+        skipped = False
         obj = state_objective(st)
         for i in range(inst.I):
             for f in np.flatnonzero((st.x[i] > 1e-9).ravel()):
                 j, k = int(f) // K, int(f) % K
                 if st.x[i, j, k] <= 1e-9:   # merged away earlier this pass
                     continue
-                ms = score_moves_batch(st, i, j, k, improve_below=obj - 1e-9)
+                if track and (i, j, k) in clean:
+                    skipped = True
+                    continue
+                ms = score_moves_batch(st, i, j, k, improve_below=obj - 1e-9,
+                                       cache=cache, obj_cur=obj)
                 if not ms.admissible.any():
+                    if track:
+                        clean.add((i, j, k))
                     continue
                 flat = int(np.argmin(ms.obj_after))
                 j2, k2 = flat // K, flat % K
@@ -279,13 +322,33 @@ def _relocate_batched(st: State, L: int, validate: bool) -> None:
                 commit(st, i, j2, k2, int(ms.c_dest[j2, k2]), ms.frac)
                 obj = state_objective(st)
                 improved = True
+                if cache is not None:
+                    cache.invalidate_type(i)
+                if track and clean:
+                    # The source pair's survivors re-score only when the
+                    # move leaves exactly one traffic type behind (its
+                    # removal now also refunds the pair); arrivals at the
+                    # destination pair lose refund appeal, never gain it.
+                    cells = set()
+                    if np.count_nonzero(st.x[:, j, k] > 1e-9) == 1:
+                        cells.add((j, k))
+                    _invalidate_sources(clean, i, cells)
                 if validate:
                     _assert_state_consistent(st)
-        if not improved:
+        any_improved |= improved
+        if improved:
+            improving += 1
+            if improving >= L:
+                break
+        elif skipped and fallback:
+            clean.clear()       # fallback full rescan before convergence
+        else:
             break
+    return any_improved
 
 
-def _try_drain_batched(st: State, j: int, k: int, validate: bool) -> bool:
+def _try_drain_batched(st: State, j: int, k: int,
+                       validate: bool) -> tuple[set, set] | None:
     """Drain pair (j,k): one vectorized pass scores every (type x
     destination) placement — delay fits and the commit-cost delta over the
     compressed active-destination list — then each type lands on its
@@ -294,15 +357,20 @@ def _try_drain_batched(st: State, j: int, k: int, validate: bool) -> bool:
     pre-placement scores over-approximate and the check restores
     exactness).  Structurally impossible drains (some type has no
     delay-admissible destination — the common case at a converged state)
-    are rejected before the snapshot/detach round trip."""
+    are rejected before the detach round trip; a rejected drain rolls back
+    through its undo records (exact restore) instead of a full-state
+    snapshot, which at (100,80,40) scale saves two multi-MB array copies
+    per probe.  Returns `(moved_types, touched_cells)` on success (the
+    dirty-source invalidation set) or None."""
     inst = st.inst
     K = inst.K
     types = np.flatnonzero(st.x[:, j, k] > 1e-9)
     dest = np.flatnonzero((st.q > 0.5).ravel())
     dest = dest[dest != j * K + k]
+    obj0 = state_objective(st)
     if types.size:
         if dest.size == 0:
-            return False
+            return None
         jj, kk = dest // K, dest % K
         cfg_d = st.cfg[jj, kk]
         # One (T, n_dest) score pass: delay admissibility is state-free and
@@ -313,21 +381,73 @@ def _try_drain_batched(st: State, j: int, k: int, validate: bool) -> bool:
                           cfg_d[None, :]]
         fits = d_td <= inst.Delta[types, None]
         if not fits.any(axis=1).all():
-            return False
+            return None
         fr = st.x[types, j, k][:, None]
+        if not st.ablation:
+            # Cap upper bound per (type, destination) on the pre-detach
+            # state: each type's own scalars are computed post-removal in
+            # closed form (exact at its placement time — other types'
+            # placements never touch them), and destination loads only
+            # grow as earlier types land, so this bounds the real commit
+            # cap from above.  A type whose best admissible destination
+            # cannot absorb its traffic dooms the whole drain before the
+            # detach/rollback round trip — the common case at a converged
+            # state with near-full destinations.
+            frv = st.x[types, j, k]
+            c_pair = int(st.cfg[j, k])
+            rr2 = st.r_rem[types] + frv
+            e2 = st.E_used[types] - inst.e_bar[types, j, k] * frv
+            dd2 = st.D_used[types] - inst.D_cfg[types, j, k, c_pair] * frv
+            ub = np.minimum(
+                rr2[:, None],
+                (inst.eps[types, None] - e2[:, None])
+                / inst.e_bar_floor[types[:, None], jj[None, :], kk[None, :]])
+            ub = np.minimum(ub, (inst.Delta[types, None] - dd2[:, None])
+                            / np.maximum(d_td, 1e-12))
+            lpx = inst.load_per_x[types[:, None], jj[None, :], kk[None, :]]
+            comp = inst.comp_cap_coef[kk] * inst.nm[cfg_d] - st.load[jj, kk]
+            with np.errstate(divide="ignore", invalid="ignore"):
+                ub = np.where(lpx > 1e-18,
+                              np.minimum(ub, comp[None, :] / lpx), ub)
+            best_ub = np.where(fits, ub, -np.inf).max(axis=1)
+            if np.any(best_ub < frv - 1e-9):
+                return None
         delta = (inst.Delta_T * inst.p_s
                  * (np.where(st.z[types][:, jj, kk] < 0.5,
                              inst.B[jj][None, :], 0.0)
                     + inst.data_gb[types, None] * fr)
                  + inst.rho[types, None] * d_td * 1e3 * fr)
         score = np.where(fits, delta, np.inf)
+        if not st.ablation:
+            # Objective lower bound: routing every type to its *cheapest*
+            # admissible destination still costs at least
+            # sum_t min(delta) against the removal + deactivation refunds
+            # — if that cannot clear the strict-improvement bar (with a
+            # 1e-6 margin over float reassociation), the drain cannot
+            # either, and the detach round trip is skipped.  The common
+            # failure mode at a converged state is exactly this
+            # "placeable but not profitable" case.
+            hz = st.z[types, j, k] > 0.5
+            refunds = (inst.Delta_T * inst.p_s
+                       * (inst.data_gb[types] * frv
+                          + np.where(hz, inst.B[j], 0.0))
+                       + inst.rho[types] * inst.D_cfg[types, j, k, c_pair]
+                       * 1e3 * frv)
+            n_str = (int(np.count_nonzero(st.z[:, j, k] > 0.5))
+                     - int(np.count_nonzero(hz)))
+            lb = (score.min(axis=1).sum() - refunds.sum()
+                  - inst.Delta_T * (inst.p_s * inst.B[j] * n_str
+                                    + inst.p_c[k] * float(st.y[j, k])))
+            if lb >= 1e-6:
+                return None
         order = np.argsort(score, axis=1, kind="stable")
-    snap = state_snapshot(st)
-    obj0 = state_objective(st)
-    fracs = [remove_assignment(st, int(i), j, k, auto_deactivate=False)
+    undo: list = []
+    fracs = [remove_assignment(st, int(i), j, k, undo=undo,
+                               auto_deactivate=False)
              for i in types]
-    deactivate_pair(st, j, k)
+    deactivate_pair(st, j, k, undo=undo)
     ok = True
+    used: set = set()
     for t, i in enumerate(types):
         i, frac = int(i), float(fracs[t])
         placed = False
@@ -336,7 +456,8 @@ def _try_drain_batched(st: State, j: int, k: int, validate: bool) -> bool:
                 break
             j2, k2 = int(jj[p]), int(kk[p])
             if max_commit(st, i, j2, k2, int(st.cfg[j2, k2])) >= frac - 1e-9:
-                commit(st, i, j2, k2, int(st.cfg[j2, k2]), frac)
+                commit(st, i, j2, k2, int(st.cfg[j2, k2]), frac, undo=undo)
+                used.add((j2, k2))
                 placed = True
                 break
         if not placed:
@@ -345,24 +466,80 @@ def _try_drain_batched(st: State, j: int, k: int, validate: bool) -> bool:
     if ok and state_objective(st) < obj0 - 1e-9:
         if validate:
             _assert_state_consistent(st)
-        return True
-    state_restore(st, snap)
-    return False
+        return {int(i) for i in types}, used | {(j, k)}
+    undo_all(st, undo)
+    return None
 
 
-def _consolidate_batched(st: State, validate: bool) -> None:
+def _consolidate_batched(st: State, validate: bool,
+                         cache: DestCache | None = None,
+                         clean: set | None = None) -> bool:
+    """Drain lightly loaded pairs, restarting the ascending-y scan after
+    every success (unchanged protocol).  A successful drain invalidates
+    the relocate engine's clean-source marks (and cached admission rows)
+    for the moved types and every touched cell, so the following relocate
+    sweep re-scores exactly the sources the drain disturbed.  Returns
+    whether any pair was drained."""
     inst = st.inst
+    any_improved = False
     while True:
         flat = np.flatnonzero((st.q > 0.5).ravel())
         active = sorted((float(st.y.ravel()[f]), int(f) // inst.K,
                          int(f) % inst.K) for f in flat)
         improved = False
         for _, j, k in active:
-            if _try_drain_batched(st, j, k, validate):
+            res = _try_drain_batched(st, j, k, validate)
+            if res is not None:
+                if cache is not None:
+                    # Arm the config diff even when the drained pair had
+                    # no traffic (empty moved-type set): its cfg flipped
+                    # to -1 and the cache must not keep scoring it as an
+                    # active, rental-free destination.
+                    cache.cfg_dirty = True
+                    for t in res[0]:
+                        cache.invalidate_type(t)
+                if clean is not None and clean:
+                    _invalidate_sources(clean, res[0], res[1])
                 improved = True
                 break
         if not improved:
+            return any_improved
+        any_improved = True
+
+
+def _improve_batched(st: State, L: int, validate: bool,
+                     incremental: bool = True) -> None:
+    """The batched improvement phase: relocate and consolidation iterate
+    to a joint fixed point (a consolidation that drained something hands
+    the disturbed sources back to relocate; one that drained nothing
+    terminates — relocate had already converged on the same state).  One
+    `DestCache` carries the destination scoring tensors across all sweeps
+    of all rounds, diff-synced against the state's config vector; with
+    `incremental`, the clean-source set persists across rounds too, so a
+    round after a drain re-scores only what the drain touched.
+
+    Inner relocate calls skip clean sources without their own fallback
+    rescan; instead, once the dirty fixed point is reached, the clean set
+    is cleared and one full verification rescan runs (plus a consolidation
+    retry if it moved anything) — the "no improving move is ever missed"
+    guarantee costs one extra sweep per ordering, not one per round."""
+    cache = DestCache(st)
+    clean: set | None = set() if incremental else None
+    while True:
+        _relocate_batched(st, L, validate, cache, clean, fallback=False)
+        if _consolidate_batched(st, validate, cache, clean):
+            continue
+        if not (incremental and clean):
             return
+        # Dirty fixed point: verify with one full rescan.  Only an applied
+        # move (deferred by the approximate invalidation rule) keeps the
+        # loop alive — and then the next fixed point is verified again, so
+        # the state returned has survived a full rescan unimproved.
+        clean.clear()
+        if not _relocate_batched(st, L, validate, cache, clean,
+                                 fallback=False):
+            return
+        _consolidate_batched(st, validate, cache, clean)
 
 
 def _assert_state_consistent(st: State) -> None:
@@ -385,12 +562,11 @@ _PARALLEL_MIN_N = 24000     # auto fan-out only beyond (20,20,20)-class sizes
 
 def _run_ordering(inst: Instance, order: np.ndarray, p1_snap: tuple, L: int,
                   batched: bool, ranked: list[np.ndarray] | None,
-                  validate: bool) -> State:
+                  validate: bool, incremental: bool = True) -> State:
     """Construction + improvement for one multi-start ordering."""
     _, st = greedy_heuristic(inst, order=order, phase1_snapshot=p1_snap)
     if batched:
-        _relocate_batched(st, L, validate)
-        _consolidate_batched(st, validate)
+        _improve_batched(st, L, validate, incremental=incremental)
     else:
         _relocate(st, L, ranked, validate)
         _consolidate(st, validate)
@@ -407,7 +583,8 @@ def _fanout_worker(idx: int):
     inst = _FANOUT["inst"]
     st = _run_ordering(inst, _FANOUT["orders"][idx],
                        _FANOUT["p1"], _FANOUT["L"], _FANOUT["batched"],
-                       _FANOUT["ranked"], _FANOUT["validate"])
+                       _FANOUT["ranked"], _FANOUT["validate"],
+                       _FANOUT["incremental"])
     # Materialize through the one shared materializer so the parallel and
     # sequential paths can never drift apart.
     return (idx, state_objective(st), solution_from_state(inst, st))
@@ -416,7 +593,7 @@ def _fanout_worker(idx: int):
 def _multi_start_parallel(inst: Instance, orders: list[np.ndarray],
                           p1_snap: tuple, L: int, batched: bool,
                           ranked: list[np.ndarray] | None, validate: bool,
-                          workers: int):
+                          workers: int, incremental: bool = True):
     """Evaluate every ordering (no early stop) and reduce deterministically.
 
     The reduction scans results in ordering-index order with the sequential
@@ -428,7 +605,8 @@ def _multi_start_parallel(inst: Instance, orders: list[np.ndarray],
                         or "fork" not in mp.get_all_start_methods()):
         workers = 1     # pool unavailable here; same protocol inline
     _FANOUT.update(inst=inst, orders=orders, p1=p1_snap, L=L,
-                   batched=batched, ranked=ranked, validate=validate)
+                   batched=batched, ranked=ranked, validate=validate,
+                   incremental=incremental)
     try:
         if workers > 1:
             import concurrent.futures as cf
@@ -476,9 +654,13 @@ def agh(inst: Instance, R: int | None = None, L: int = 3, seed: int = 0,
     """Adaptive Greedy Heuristic.
 
     `local_search` picks the improvement engine: "batched" (default, the
-    scored-matrix engine over the full destination grid) or "reference"
-    (the first-improvement probe loop, bit-identical to the frozen scalar
-    seed path).  `workers` controls the multi-start driver: ``0`` forces
+    incremental scored-matrix engine — amortized destination tensors plus
+    dirty-source tracking with a fallback full rescan before convergence),
+    "batched-rescan" (the same engine with dirty-source tracking disabled:
+    every sweep re-scores every source — the oracle the incremental mode
+    is tested bit-equal against), or "reference" (the first-improvement
+    probe loop, bit-identical to the frozen scalar seed path).  `workers`
+    controls the multi-start driver: ``0`` forces
     the sequential early-stop protocol, ``n >= 1`` evaluates every ordering
     under the deterministic-reduction protocol (fanning out over ``n``
     forked processes when ``n > 1``; results are independent of ``n``), and
@@ -488,6 +670,7 @@ def agh(inst: Instance, R: int | None = None, L: int = 3, seed: int = 0,
     t0 = time.perf_counter()
     rng = np.random.default_rng(seed)
     batched = local_search != "reference"
+    incremental = local_search != "batched-rescan"
     if R is None:
         R = _adaptive_R(inst, batched=batched)
     orders = _orderings(inst, R, rng)
@@ -501,13 +684,14 @@ def agh(inst: Instance, R: int | None = None, L: int = 3, seed: int = 0,
         workers = _auto_workers(inst, len(orders)) if batched else 0
     if workers:
         best, best_obj = _multi_start_parallel(
-            inst, orders, p1_snap, L, batched, ranked, validate, workers)
+            inst, orders, p1_snap, L, batched, ranked, validate, workers,
+            incremental=incremental)
     else:
         best, best_obj = None, np.inf
         stale = 0
         for order in orders:
             st = _run_ordering(inst, order, p1_snap, L, batched, ranked,
-                               validate)
+                               validate, incremental=incremental)
             obj = state_objective(st)
             if obj < best_obj - 1e-9:
                 best, best_obj = solution_from_state(inst, st), obj

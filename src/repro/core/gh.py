@@ -77,17 +77,18 @@ def _phase2(st: State, order: np.ndarray) -> None:
     K = inst.K
     no_m1 = "no_m1" in st.ablation
     no_m3 = "no_m3" in st.ablation
+    if no_m1:
+        c_inact_const = np.full((inst.J, K), inst.cfg_min_nm, dtype=np.int64)
+    # The active set changes only when a commit activates a fresh pair —
+    # track that instead of recomputing the mask per type.
+    active = st.q > 0.5
+    jj, kk = np.nonzero(active)                           # j-major order
     for i in order:
         i = int(i)
-        active = st.q > 0.5
-        if no_m1:
-            c_inact = np.full((inst.J, K), inst.cfg_min_nm, dtype=np.int64)
-        else:
-            c_inact = inst.cfg_m1[i]
+        c_inact = c_inact_const if no_m1 else inst.cfg_m1[i]
         c_arr = np.where(active, st.cfg, c_inact)         # [J,K], -1 = none
         # Active pairs whose current config breaks the type's delay SLO
         # either get an M3 upgrade or (ablated) are routed to anyway.
-        jj, kk = np.nonzero(active)                       # j-major order
         if not no_m3 and jj.size:
             # Gather the few active cells' delays directly — the full
             # [J,K] take_along_axis grid is pure overhead here.
@@ -107,24 +108,31 @@ def _phase2(st: State, order: np.ndarray) -> None:
                 d_sel[jj, kk] = inst.D_cfg[i, jj, kk,
                                            np.maximum(c_arr[jj, kk], 0)]
         pi, kappa, valid = rank_keys_all(st, i, c_arr, d_sel=d_sel)  # M2
-        idx = np.flatnonzero(valid.ravel())
-        if idx.size == 0:
+        if not valid.any():
             continue
-        # Stable lexsort by (pi, kappa) keeps j-major scan order on ties —
-        # identical to the scalar path's stable tuple sort.
-        idx = idx[np.lexsort((kappa.ravel()[idx], pi.ravel()[idx]))]
-        # Commit caps: the scan almost always commits on the first ranked
-        # candidate and exhausts the type's demand, so the first few
-        # visited candidates use the O(1) scalar `max_commit` (identical
-        # arithmetic to the batch).  Only a pathological scan — many ranked
-        # candidates with zero cap — pays one `max_commit_batch` pass,
-        # after which dead candidates are skipped wholesale.
-        caps = live = None
+        # Lazy (pi, kappa)-lexicographic scan.  The previous engine
+        # lexsorted every valid candidate up front, but the scan almost
+        # always commits on the first one and stops — so candidates are
+        # now *selected* on demand: all pi=0 (full-coverage) cells are
+        # visited before any pi=1 cell, each class in ascending kappa,
+        # and `argmin` returns the first minimum, which reproduces the
+        # stable lexsort's j-major tie order exactly.  A visited cell is
+        # masked to +inf and never revisited (the sorted walk's `p` only
+        # moved forward), so the visit sequence is identical.
+        kap0 = np.where(valid & (pi == 0), kappa, np.inf).ravel()
+        kap1 = np.where(valid & (pi == 1), kappa, np.inf).ravel()
+        caps = None
         probes = 0
-        p = 0
-        while p < idx.size and st.r_rem[i] > 1e-9:
-            flat = idx[p]
-            j, k = int(flat) // K, int(flat) % K
+        while st.r_rem[i] > 1e-9:
+            flat = int(np.argmin(kap0))
+            cur = kap0
+            if not np.isfinite(kap0[flat]):
+                flat = int(np.argmin(kap1))
+                cur = kap1
+                if not np.isfinite(kap1[flat]):
+                    break
+            cur[flat] = np.inf      # visited: the walk never backtracks
+            j, k = flat // K, flat % K
             c = int(c_arr[j, k])
             # Re-validate under the *current* state (the pair may have
             # been upgraded while serving an earlier candidate).
@@ -132,7 +140,6 @@ def _phase2(st: State, order: np.ndarray) -> None:
                     and inst.nm[c] <= st.y[j, k]):
                 c_use = int(st.cfg[j, k])
                 if inst.D_cfg[i, j, k, c_use] > inst.Delta[i]:
-                    p += 1
                     continue
             else:
                 c_use = c
@@ -145,24 +152,25 @@ def _phase2(st: State, order: np.ndarray) -> None:
                 probes += 1
             else:               # long dead scan: batch the rest of the row
                 caps = max_commit_batch(st, i, c_arr)
-                c_f = c_arr.ravel()[idx]
-                stale = ((st.q.ravel()[idx] > 0.5)
-                         & (c_f != st.cfg.ravel()[idx])
-                         & (inst.nm[c_f] <= st.y.ravel()[idx]))
-                live = np.flatnonzero(stale | (caps.ravel()[idx] > 1e-9))
+                # Wholesale-mask candidates the batch proves dead, except
+                # stale-config cells (they re-validate to the pair's own
+                # config above, so their row cap is not authoritative).
+                stale = (active & (c_arr != st.cfg)
+                         & (inst.nm[np.maximum(c_arr, 0)] <= st.y))
+                dead = ~(stale | (caps > 1e-9))
+                kap0[dead.ravel()] = np.inf
+                kap1[dead.ravel()] = np.inf
                 cap = float(caps[j, k])
             frac = min(st.r_rem[i], cap)
             if frac <= 1e-9:
-                if live is None:
-                    p += 1
-                else:           # jump over batch-identified dead candidates
-                    nxt = live[np.searchsorted(live, p + 1):]
-                    p = int(nxt[0]) if nxt.size else idx.size
                 continue
+            was_active = st.q[j, k] > 0.5
             commit(st, i, j, k, c_use, frac)
-            caps = live = None  # state changed: cached row caps invalid
+            if not was_active:
+                active[j, k] = True
+                jj, kk = np.nonzero(active)
+            caps = None         # state changed: cached row caps invalid
             probes = 0
-            p += 1
 
 
 def greedy_heuristic(inst: Instance, order: np.ndarray | None = None,

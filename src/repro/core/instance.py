@@ -128,7 +128,6 @@ class Instance:
         # Joint (TP, PP) configuration lattice.
         self.configs = [(n, m) for n in self.tp_degrees for m in self.pp_depths]
         self.nm = np.array([n * m for (n, m) in self.configs])     # [C]
-        C = len(self.configs)
         n_arr = np.array([n for (n, _) in self.configs], float)
         m_arr = np.array([m for (_, m) in self.configs], float)
         # D^k_ij(n,m) = d_comp * r_i / n + m * d_comm * f_i  (paper §3.1(7)).
@@ -212,6 +211,13 @@ class Instance:
             axis=3)[..., 0]                                         # [I,J,K]
         self.jk_idx = np.arange(J * K)
         self.D_cfg_flat = self.D_cfg.reshape(I, J * K, C)
+        # Flat [I, J*K] / [J*K] zero-copy views for the compressed-cells
+        # cap evaluator (`max_commit_cells`) and the relocate screen's
+        # upper-bound prefilter — gathering through these skips a reshape
+        # per call, which adds up at local-search call rates.
+        self.kv_tok_per_x_flat = self.kv_tok_per_x.reshape(I, J * K)
+        self.load_per_x_flat = self.load_per_x.reshape(I, J * K)
+        self.B_eff_flat = self.B_eff.reshape(J * K)
         # Constant factors hoisted out of `max_commit_batch` /
         # `rank_keys_all` — same operations on the same inputs, computed
         # once per instance instead of per call (the per-op dispatch cost
@@ -220,6 +226,7 @@ class Instance:
         self.comp_cap_coef = self.eta * 3600.0 * self.P_gpu         # [K]
         self.p_s_B = self.p_s * self.B                              # [J]
         self.e_bar_floor = np.maximum(self.e_bar, 1e-12)            # [I,J,K]
+        self.e_bar_floor_flat = self.e_bar_floor.reshape(I, J * K)
         self.m1_feasible = self.cfg_m1 >= 0                         # [I,J,K]
         # Incremental rental of activating a pair at its M1 winner for type
         # i (0 GPUs where infeasible) — the inactive-destination branch of

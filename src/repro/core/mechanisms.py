@@ -203,13 +203,32 @@ def rank_keys_all(st: State, i: int, c_arr: np.ndarray,
 # Commit machinery (GH Phase-2 Step 4): verify (8f)-(8h) + budget, commit.
 # ---------------------------------------------------------------------------
 
-def max_commit(st: State, i: int, j: int, k: int, c: int) -> float:
+def max_commit(st: State, i: int, j: int, k: int, c: int,
+               over: tuple | None = None) -> float:
     """Largest additional fraction of type-i traffic committable to (j,k)
     at config c without violating (8f) memory, (8g) compute, (8h) storage,
-    or the budget (8c).  O(1): reads the State's incremental aggregates."""
+    or the budget (8c).  O(1): reads the State's incremental aggregates.
+
+    `over` optionally substitutes the type-local scalars
+    ``(r_rem_i, E_used_i, D_used_i, stor_used_i, spend)`` — see
+    `max_commit_batch`; the arithmetic below is `effective_coverage` plus
+    the cap chain on those values, bit-identical to the plain path when
+    `over` carries the state's own scalars."""
     inst = st.inst
     nm = float(inst.nm[c])
-    cap = effective_coverage(st, i, j, k, c)
+    if over is None:
+        cap = effective_coverage(st, i, j, k, c)
+        stor_i = st.stor_used[i]
+        spend = st.spend
+    else:
+        rr_i, e_i, d_i, stor_i, spend = over
+        e = inst.e_bar[i, j, k]
+        d = inst.D_cfg[i, j, k, c]
+        err_cap = (inst.eps[i] - e_i) / max(e, 1e-12)
+        del_cap = (inst.Delta[i] - d_i) / max(d, 1e-12)
+        if "no_m3" in st.ablation:
+            del_cap = rr_i
+        cap = float(min(rr_i, err_cap, del_cap))
     # (8f): per-device memory headroom -> token budget -> x budget.
     if "no_m1" in st.ablation:
         pass  # ablated: commit blindly past the memory budget
@@ -233,21 +252,22 @@ def max_commit(st: State, i: int, j: int, k: int, c: int) -> float:
     new_weight = inst.B[j] if st.z[i, j, k] < 0.5 else 0.0
     per_x = inst.data_gb[i]
     if per_x > 1e-18:
-        cap = min(cap, (inst.C_s - st.stor_used[i] - new_weight) / per_x)
+        cap = min(cap, (inst.C_s - stor_i - new_weight) / per_x)
     # budget (8c): incremental rental + data storage per unit x.
     inc_gpus = max(0.0, inst.nm[c] - st.y[j, k])
     fixed = inst.Delta_T * (inst.p_c[k] * inc_gpus
                             + (inst.p_s * inst.B[j] if st.z[i, j, k] < 0.5 else 0.0))
     per_x = inst.budget_per_x[i]
-    if st.spend + fixed > inst.delta:
+    if spend + fixed > inst.delta:
         return 0.0
     if per_x > 1e-18:
-        cap = min(cap, (inst.delta - st.spend - fixed) / per_x)
+        cap = min(cap, (inst.delta - spend - fixed) / per_x)
     return max(0.0, float(cap))
 
 
 def max_commit_batch(st: State, i: int, c_arr: np.ndarray,
-                     d_sel: np.ndarray | None = None) -> np.ndarray:
+                     d_sel: np.ndarray | None = None,
+                     over: tuple | None = None) -> np.ndarray:
     """`max_commit` for type i over every (j,k) pair at once.
 
     `c_arr[J,K]` gives the config per pair (-1 -> cap 0).  Pure in the
@@ -257,16 +277,31 @@ def max_commit_batch(st: State, i: int, c_arr: np.ndarray,
     already-gathered per-pair delay (`delay_sel`) so callers that need it
     anyway don't pay the gather twice.  Elementwise arithmetic mirrors
     `max_commit` exactly.
+
+    `over` optionally substitutes the type-local scalars
+    ``(r_rem_i, E_used_i, D_used_i, stor_used_i, spend)`` — the relocate
+    screen passes the source-removed values computed in closed form (same
+    float ops `remove_assignment` would apply, so the caps equal a real
+    remove → batch → undo round trip bitwise on every non-source cell)
+    without mutating the state.
     """
     inst = st.inst
+    if over is None:
+        rr_i = float(st.r_rem[i])
+        e_i = st.E_used[i]
+        d_i = st.D_used[i]
+        stor_i = st.stor_used[i]
+        spend = st.spend
+    else:
+        rr_i, e_i, d_i, stor_i, spend = over
     cc = np.maximum(c_arr, 0)
     nm = inst.nm[cc]
     d = delay_sel(inst, i, c_arr) if d_sel is None else d_sel
-    err_cap = (inst.eps[i] - st.E_used[i]) / inst.e_bar_floor[i]
-    del_cap = (inst.Delta[i] - st.D_used[i]) / np.maximum(d, 1e-12)
+    err_cap = (inst.eps[i] - e_i) / inst.e_bar_floor[i]
+    del_cap = (inst.Delta[i] - d_i) / np.maximum(d, 1e-12)
     if "no_m3" in st.ablation:
-        del_cap = np.full_like(d, float(st.r_rem[i]))
-    cap = np.minimum(np.minimum(float(st.r_rem[i]), err_cap), del_cap)
+        del_cap = np.full_like(d, rr_i)
+    cap = np.minimum(np.minimum(rr_i, err_cap), del_cap)
     dead = c_arr < 0
     zm = st.z[i] < 0.5
     with np.errstate(divide="ignore", invalid="ignore"):
@@ -294,17 +329,211 @@ def max_commit_batch(st: State, i: int, c_arr: np.ndarray,
         # (8h)
         new_weight = np.where(zm, inst.B[:, None], 0.0)
         if inst.data_gb[i] > 1e-18:
-            cap = np.minimum(cap, (inst.C_s - st.stor_used[i] - new_weight)
+            cap = np.minimum(cap, (inst.C_s - stor_i - new_weight)
                              / inst.data_gb[i])
         # budget (8c)
         inc_gpus = np.maximum(0.0, nm - st.y)
         fixed = inst.Delta_T * (inst.p_c[None, :] * inc_gpus
                                 + np.where(zm, inst.p_s_B[:, None], 0.0))
-        dead |= st.spend + fixed > inst.delta
+        dead |= spend + fixed > inst.delta
         if inst.budget_per_x[i] > 1e-18:
-            cap = np.minimum(cap, (inst.delta - st.spend - fixed)
+            cap = np.minimum(cap, (inst.delta - spend - fixed)
                              / inst.budget_per_x[i])
     return np.where(dead, 0.0, np.maximum(0.0, cap))
+
+
+def max_commit_cells(st: State, i: int, cells: np.ndarray,
+                     c_cells: np.ndarray, d_cells: np.ndarray,
+                     over: tuple | None = None) -> np.ndarray:
+    """`max_commit_batch` on a compressed 1-D list of flat (j,k) cells.
+
+    The pure relocate scan's improvement filter usually leaves a handful
+    of candidate destinations; evaluating their (8c)-(8h) caps on [n]
+    gathered vectors costs a flat ~25 small-array ops instead of the full
+    [J,K] grid pass.  Elementwise arithmetic mirrors `max_commit_batch`
+    cell for cell (same ops on the same values — no reductions — so the
+    results are bitwise identical to the grid pass at those cells).
+    `c_cells`/`d_cells` are the candidate configs and delays at `cells`;
+    all cells must hold valid configs (>= 0).  `over` as in
+    `max_commit_batch`."""
+    inst = st.inst
+    if over is None:
+        rr_i = float(st.r_rem[i])
+        e_i = st.E_used[i]
+        d_i = st.D_used[i]
+        stor_i = st.stor_used[i]
+        spend = st.spend
+    else:
+        rr_i, e_i, d_i, stor_i, spend = over
+    K = inst.K
+    jj = cells // K
+    kk = cells - jj * K
+    nm = inst.nm[c_cells]
+    err_cap = (inst.eps[i] - e_i) / inst.e_bar_floor_flat[i][cells]
+    del_cap = (inst.Delta[i] - d_i) / np.maximum(d_cells, 1e-12)
+    if "no_m3" in st.ablation:
+        del_cap = np.full_like(d_cells, rr_i)
+    cap = np.minimum(np.minimum(rr_i, err_cap), del_cap)
+    dead = np.zeros(cells.shape, dtype=bool)
+    zm = st.z[i].reshape(-1)[cells] < 0.5
+    kv_tok = st.kv_tok.reshape(-1)[cells]
+    load = st.load.reshape(-1)[cells]
+    y = st.y.reshape(-1)[cells]
+    with np.errstate(divide="ignore", invalid="ignore"):
+        # (8f)
+        if "no_m1" not in st.ablation:
+            b_dev = inst.B_eff_flat[cells] / nm
+            kvd = inst.kv_gb_per_tok[jj] / nm
+            head_gb = inst.C_gpu[kk] - b_dev - kvd * kv_tok
+            per_x = kvd * inst.kv_tok_per_x_flat[i][cells]
+            kv = inst.kv_applicable[jj]
+            has_px = per_x > 1e-18
+            cap = np.where(kv & has_px, np.minimum(cap, head_gb / per_x),
+                           cap)
+            dead |= kv & ~has_px & (head_gb < 0)
+            dead |= ~kv & (inst.C_gpu[kk] - b_dev < 0)
+        # (8g)
+        per_x = inst.load_per_x_flat[i][cells]
+        has_px = per_x > 1e-18
+        cap = np.where(has_px,
+                       np.minimum(cap, (inst.comp_cap_coef[kk] * nm
+                                        - load) / per_x),
+                       cap)
+        # (8h)
+        new_weight = np.where(zm, inst.B[jj], 0.0)
+        if inst.data_gb[i] > 1e-18:
+            cap = np.minimum(cap, (inst.C_s - stor_i - new_weight)
+                             / inst.data_gb[i])
+        # budget (8c)
+        inc_gpus = np.maximum(0.0, nm - y)
+        fixed = inst.Delta_T * (inst.p_c[kk] * inc_gpus
+                                + np.where(zm, inst.p_s_B[jj], 0.0))
+        dead |= spend + fixed > inst.delta
+        if inst.budget_per_x[i] > 1e-18:
+            cap = np.minimum(cap, (inst.delta - spend - fixed)
+                             / inst.budget_per_x[i])
+    return np.where(dead, 0.0, np.maximum(0.0, cap))
+
+
+class DestCache:
+    """Amortized destination scoring tensors for the incremental engine.
+
+    `score_moves_batch` derives four [J,K] destination matrices per scan —
+    candidate config, delay at that config, delay/M1 admissibility, and
+    incremental rental — from the per-instance M1 tensors with the active
+    cells overwritten.  Those matrices depend only on each pair's selected
+    config (`st.cfg`; >= 0 iff the pair is active), not on the source cell
+    being scanned, so the cache holds them as stacked [I,J,K] tensors:
+    each type's rows are materialized lazily on first scan (one build per
+    type per local search instead of four copies per scan), and `sync`
+    refreshes only the columns whose config changed since the last call —
+    one [J,K] int compare plus O(I) per touched cell.  Cell values are
+    computed by the same expressions as the uncached path, so cached scans
+    are bit-identical to uncached ones (pinned by the oracle tests).
+
+    `rows` must be called while the state's `cfg` is consistent (i.e. not
+    between a scan's internal remove/undo pair); `score_moves_batch` syncs
+    before detaching the source.
+    """
+
+    def __init__(self, st: State):
+        inst = st.inst
+        I, J, K = inst.I, inst.J, inst.K
+        self.inst = inst
+        self.cfg_seen = st.cfg.copy()
+        self.c_dest = np.empty((I, J, K), dtype=inst.cfg_m1.dtype)
+        self.d_sel = np.empty((I, J, K))
+        self.ok = np.empty((I, J, K), dtype=bool)
+        self.rental = np.empty((I, J, K))
+        # Static destination cost: Delta_T * (incremental rental + the
+        # first-admission weight-storage term) — the destination delta
+        # minus its frac-scaled parts, so the scan's improvement filter is
+        # two array ops.  Depends on cfg (rental) AND on the type's own
+        # admission row z[i] — `invalidate_type` flags the latter.
+        self.dcost = np.empty((I, J, K))
+        self.built = [False] * I
+        self.zbuilt = [False] * I
+        # Shared all-dead result arrays for the (dominant) no-candidate
+        # return — read-only so an aliasing caller cannot corrupt them.
+        self.caps0 = np.zeros((J, K))
+        self.caps0.setflags(write=False)
+        self.adm0 = np.zeros((J, K), dtype=bool)
+        self.adm0.setflags(write=False)
+        self.inf0 = np.full((J, K), np.inf)
+        self.inf0.setflags(write=False)
+        # Every cfg change during local search is part of an applied move
+        # or drain, which must call `invalidate_type` — that sets this
+        # flag, and `rows` only diffs cfg_seen while it is up.
+        self.cfg_dirty = False
+
+    def invalidate_type(self, i: int) -> None:
+        """Notify the cache of an applied move/drain placement of type i:
+        its admission row z[i] changed (static-cost row rebuilds on next
+        use) and the move may have activated/deactivated pairs (cfg diff
+        re-enabled)."""
+        self.zbuilt[i] = False
+        self.cfg_dirty = True
+
+    def _sync(self, st: State) -> None:
+        changed = np.flatnonzero(st.cfg != self.cfg_seen)
+        if changed.size == 0:
+            return
+        inst = self.inst
+        K = st.cfg.shape[1]
+        # Column updates are vectorized over all I rows; rows not yet
+        # built get overwritten at build time anyway.  dcost columns use
+        # the live z column — exactly what a row rebuild would read.
+        for f in changed:
+            j, k = int(f) // K, int(f) % K
+            c = int(st.cfg[j, k])
+            if c >= 0:
+                d = inst.D_cfg[:, j, k, c]
+                self.c_dest[:, j, k] = c
+                self.d_sel[:, j, k] = d
+                self.ok[:, j, k] = d <= inst.Delta
+                self.rental[:, j, k] = 0.0
+                self.dcost[:, j, k] = inst.Delta_T * np.where(
+                    st.z[:, j, k] < 0.5, inst.p_s_B[j], 0.0)
+            else:
+                self.c_dest[:, j, k] = inst.cfg_m1[:, j, k]
+                self.d_sel[:, j, k] = inst.m1_delay[:, j, k]
+                self.ok[:, j, k] = inst.m1_feasible[:, j, k]
+                self.rental[:, j, k] = inst.m1_rental[:, j, k]
+                self.dcost[:, j, k] = inst.Delta_T * (
+                    inst.m1_rental[:, j, k]
+                    + np.where(st.z[:, j, k] < 0.5, inst.p_s_B[j], 0.0))
+            self.cfg_seen[j, k] = c
+
+    def rows(self, st: State, i: int):
+        """Synced (c_dest, d_sel, ok, rental, dcost) rows for type i
+        (built on first use).  The returned arrays are cache-owned views —
+        callers must not mutate them."""
+        if self.cfg_dirty:
+            self._sync(st)
+            self.cfg_dirty = False
+        if not self.built[i]:
+            inst = self.inst
+            jj, kk = np.nonzero(self.cfg_seen >= 0)
+            c_act = self.cfg_seen[jj, kk]
+            d_act = inst.D_cfg[i, jj, kk, c_act]
+            self.c_dest[i] = inst.cfg_m1[i]
+            self.c_dest[i, jj, kk] = c_act
+            self.d_sel[i] = inst.m1_delay[i]
+            self.d_sel[i, jj, kk] = d_act
+            self.ok[i] = inst.m1_feasible[i]
+            self.ok[i, jj, kk] = d_act <= inst.Delta[i]
+            self.rental[i] = inst.m1_rental[i]
+            self.rental[i, jj, kk] = 0.0
+            self.built[i] = True
+            self.zbuilt[i] = False
+        if not self.zbuilt[i]:
+            inst = self.inst
+            self.dcost[i] = inst.Delta_T * (
+                self.rental[i] + np.where(st.z[i] < 0.5,
+                                          inst.p_s_B[:, None], 0.0))
+            self.zbuilt[i] = True
+        return (self.c_dest[i], self.d_sel[i], self.ok[i], self.rental[i],
+                self.dcost[i])
 
 
 @dataclasses.dataclass
@@ -315,7 +544,14 @@ class MoveScores:
     the solution after moving the full fraction to (j2,k2) (`inf` where the
     move is inadmissible), `caps` the destination's (8c)-(8h) commit cap,
     `c_dest` the config the move would commit at, and `obj_removed` the
-    objective of the intermediate source-removed state."""
+    objective of the intermediate source-removed state.
+
+    The pure path (`cache` + `improve_below`) is *lazy*: cap verification
+    stops at the best admissible destination, so `admissible` marks only
+    that cell (the exact argmin of the full scan's admissible set — see
+    the best-first argument in the source) and `caps` is populated only
+    there; `obj_removed` is the closed-form value, accurate to float
+    reassociation.  The exhaustive grids come from the non-lazy paths."""
     i: int
     j: int
     k: int
@@ -328,7 +564,9 @@ class MoveScores:
 
 
 def score_moves_batch(st: State, i: int, j: int, k: int,
-                      improve_below: float | None = None) -> MoveScores:
+                      improve_below: float | None = None,
+                      cache: DestCache | None = None,
+                      obj_cur: float | None = None) -> MoveScores:
     """Score moving all of x[i,j,k] to every destination (j2,k2) at once.
 
     One pass replaces the scalar probe-per-destination loop: config
@@ -344,21 +582,164 @@ def score_moves_batch(st: State, i: int, j: int, k: int,
     cap evaluation — the scan's fast path: a converged source pays only
     the delta arithmetic (caps stay zero, `obj_after` stays inf) and the
     expensive (8c)-(8h) pass runs only when an improving candidate exists.
+
+    With `cache` (a `DestCache`) and `improve_below` together, the scan is
+    *pure* — the state is never touched.  The destination matrices come
+    from the cache's lazily built, diff-synced per-type rows (same cell
+    values bit-for-bit as the uncached rebuild); the source-removed
+    objective is derived in closed form (the removal's refunds mirror
+    `remove_assignment` + `deactivate_pair` term by term, accurate to
+    float reassociation, ~1e-12 at objective scale); and the commit caps
+    come from `max_commit_batch` with the source-removed type scalars
+    passed as overrides — the same float ops a real removal would apply,
+    so the caps equal the remove → score → undo protocol bitwise on every
+    non-source cell.  `obj_cur` optionally passes the caller's current
+    objective so the sweep loop's value is reused instead of recomputed.
     """
     inst = st.inst
+    if cache is not None and improve_below is not None:
+        c_dest, d_sel, ok_c, rental, dcost = cache.rows(st, i)
+        frac = float(st.x[i, j, k])
+        c_src = int(st.cfg[j, k])
+        had_z = bool(st.z[i, j, k] > 0.5)
+        # Removal gain in closed form: refunded data storage, weight
+        # storage on first-admission drop, routed delay — plus the rental
+        # and stranded-admission refunds of `deactivate_pair` when the
+        # source is the pair's last traffic.  The removal's unmet-penalty
+        # increase (phi * frac exactly, since r_rem >= 0 invariantly)
+        # cancels against the destination's `d_unmet` term, so obj_after
+        # reduces to obj_cur - gain + the destination delta.
+        data = inst.data_gb[i] * frac
+        weight = inst.B[j] if had_z else 0.0
+        d_src = inst.D_cfg[i, j, k, c_src]
+        gain = (inst.Delta_T * inst.p_s * (data + weight)
+                + inst.rho[i] * d_src * 1e3 * frac)
+        deact = float(st.x[:, j, k].sum()) - frac <= 1e-12
+        if deact:
+            n_oth = int(np.count_nonzero(st.z[:, j, k] > 0.5))
+            if had_z:
+                n_oth -= 1
+            gain += inst.Delta_T * (inst.p_s * inst.B[j] * n_oth
+                                    + inst.p_c[k] * float(st.y[j, k]))
+        if obj_cur is None:
+            obj_cur = state_objective(st)
+        obj0 = obj_cur - gain + inst.Delta_T * inst.phi[i] * frac
+        # Improvement filter in two array ops: the frac-scaled delay term
+        # plus the cached static destination cost against a folded bound.
+        dyn = float(inst.rho[i]) * 1e3 * frac
+        base = obj_cur - gain + inst.Delta_T * (inst.p_s * data)
+        delta = dcost + dyn * d_sel
+        ok = ok_c & (delta < improve_below - base)
+        ok[j, k] = False
+        cells = np.flatnonzero(ok.reshape(-1))
+        if cells.size == 0:
+            return MoveScores(i=i, j=j, k=k, frac=frac, c_dest=c_dest,
+                              caps=cache.caps0, admissible=cache.adm0,
+                              obj_after=cache.inf0, obj_removed=obj0)
+        # Source-removed scalars, in `remove_assignment`'s own op order,
+        # so the caps equal a real remove -> score -> undo round trip.
+        rr2 = float(st.r_rem[i]) + frac
+        e2 = st.E_used[i] - inst.e_bar[i, j, k] * frac
+        d2 = st.D_used[i] - d_src * frac
+        stor2 = st.stor_used[i] - (data + weight)
+        sp2 = st.spend - inst.Delta_T * inst.p_s * (data + weight)
+        if deact:
+            if n_oth:
+                sp2 -= inst.Delta_T * inst.p_s * inst.B[j] * n_oth
+            sp2 -= inst.Delta_T * inst.p_c[k] * float(st.y[j, k])
+        over = (rr2, e2, d2, stor2, sp2)
+        # Cap upper bound on the surviving cells: `max_commit`'s chain
+        # starts from min(r_rem, err_cap, del_cap) and the (8g) compute
+        # term and only min()s further, so any cell whose bound is already
+        # under `frac` is dead — killing it here cannot change the scan's
+        # outcome, and most improving-but-undercap candidates die on
+        # these four cheap compressed-vector terms.
+        d_cells0 = d_sel.reshape(-1)[cells]
+        ub = np.minimum((inst.eps[i] - e2) / inst.e_bar_floor_flat[i][cells],
+                        (inst.Delta[i] - d2) / np.maximum(d_cells0, 1e-12))
+        if "no_m3" in st.ablation:
+            ub = np.full_like(d_cells0, rr2)
+        ub = np.minimum(rr2, ub)
+        per_x = inst.load_per_x_flat[i][cells]
+        with np.errstate(divide="ignore", invalid="ignore"):
+            kk_c = cells % inst.K
+            nm_c = inst.nm[c_dest.reshape(-1)[cells]]
+            gcap = (inst.comp_cap_coef[kk_c] * nm_c
+                    - st.load.reshape(-1)[cells]) / per_x
+        ub = np.where(per_x > 1e-18, np.minimum(ub, gcap), ub)
+        alive = ub >= frac - 1e-9
+        if not alive.all():
+            cells = cells[alive]
+            if cells.size == 0:
+                return MoveScores(i=i, j=j, k=k, frac=frac, c_dest=c_dest,
+                                  caps=cache.caps0, admissible=cache.adm0,
+                                  obj_after=cache.inf0, obj_removed=obj0)
+        # Best-first cap verification: obj_after is `delta` plus a
+        # constant, so walking candidates in ascending-delta order (stable
+        # — flat-index ties keep the grid argmin's j-major order) and
+        # stopping at the first one whose cap fits selects exactly the
+        # argmin of obj_after over the admissible set, at the cost of a
+        # few O(1) cap checks instead of a full cap pass.  Long undercap
+        # runs fall back to one vectorized pass over the remaining cells.
+        d_cells = delta.reshape(-1)[cells]
+        cap_order = np.argsort(d_cells, kind="stable")
+        found = -1
+        cap_found = 0.0
+        n_try = min(cap_order.size, 8)
+        for t in range(n_try):
+            f = int(cells[cap_order[t]])
+            j2, k2 = f // inst.K, f % inst.K
+            cap = max_commit(st, i, j2, k2, int(c_dest[j2, k2]), over=over)
+            if cap >= frac - 1e-9:
+                found, cap_found = f, cap
+                break
+        if found < 0 and cap_order.size > n_try:
+            rest = cells[cap_order[n_try:]]
+            caps_r = max_commit_cells(st, i, rest,
+                                      c_dest.reshape(-1)[rest],
+                                      d_sel.reshape(-1)[rest], over=over)
+            hits = np.flatnonzero(caps_r >= frac - 1e-9)
+            if hits.size:
+                found = int(rest[hits[0]])
+                cap_found = float(caps_r[hits[0]])
+        if found < 0:
+            return MoveScores(i=i, j=j, k=k, frac=frac, c_dest=c_dest,
+                              caps=cache.caps0, admissible=cache.adm0,
+                              obj_after=cache.inf0, obj_removed=obj0)
+        caps = np.zeros_like(d_sel)
+        caps.reshape(-1)[found] = cap_found
+        adm = np.zeros(ok.shape, dtype=bool)
+        adm.reshape(-1)[found] = True
+        obj_after = np.full_like(d_sel, np.inf)
+        obj_after.reshape(-1)[found] = delta.reshape(-1)[found] + base
+        return MoveScores(i=i, j=j, k=k, frac=frac, c_dest=c_dest,
+                          caps=caps, admissible=adm, obj_after=obj_after,
+                          obj_removed=obj0)
+    if cache is not None:
+        # Rows are read on the pre-detach state: the removal below may
+        # deactivate the source pair, and that transient must not enter
+        # the cache.  The only cell where the rows can then disagree with
+        # the detached state is the source itself, which the
+        # `ok[j, k] = False` exclusion masks either way.
+        c_dest, d_sel, ok_c, rental, _ = cache.rows(st, i)
     undo: list = []
     frac = remove_assignment(st, i, j, k, undo=undo)
-    # Destination configs/delays: the precomputed M1 winner everywhere,
-    # overwritten on the (few) active cells with the pair's own config.
-    jj, kk = np.nonzero(st.q > 0.5)
-    c_act = st.cfg[jj, kk]
-    c_dest = inst.cfg_m1[i].copy()
-    c_dest[jj, kk] = c_act
-    d_sel = inst.m1_delay[i].copy()
-    d_act = inst.D_cfg[i, jj, kk, c_act]
-    d_sel[jj, kk] = d_act
-    ok = inst.m1_feasible[i].copy()
-    ok[jj, kk] = d_act <= inst.Delta[i]
+    if cache is None:
+        # Destination configs/delays: the precomputed M1 winner everywhere,
+        # overwritten on the (few) active cells with the pair's own config.
+        jj, kk = np.nonzero(st.q > 0.5)
+        c_act = st.cfg[jj, kk]
+        c_dest = inst.cfg_m1[i].copy()
+        c_dest[jj, kk] = c_act
+        d_sel = inst.m1_delay[i].copy()
+        d_act = inst.D_cfg[i, jj, kk, c_act]
+        d_sel[jj, kk] = d_act
+        ok = inst.m1_feasible[i].copy()
+        ok[jj, kk] = d_act <= inst.Delta[i]
+        rental = inst.m1_rental[i].copy()
+        rental[jj, kk] = 0.0
+    else:
+        ok = ok_c.copy()
     ok[j, k] = False
     obj0 = state_objective(st)
     # Delta objective of committing `frac` at each destination, mirroring
@@ -367,8 +748,6 @@ def score_moves_batch(st: State, i: int, j: int, k: int,
     # precomputed M1 rental with active cells zeroed), first-admission
     # model storage, per-fraction data storage, routed delay, and the
     # absorbed unmet penalty (a destination-independent scalar).
-    rental = inst.m1_rental[i].copy()
-    rental[jj, kk] = 0.0
     rr = float(st.r_rem[i])
     d_unmet = max(rr - frac, 0.0) - max(rr, 0.0)
     obj_after = (obj0 + inst.Delta_T * inst.phi[i] * d_unmet
@@ -498,11 +877,17 @@ def remove_assignment(st: State, i: int, j: int, k: int,
     return frac
 
 
-def deactivate_pair(st: State, j: int, k: int) -> None:
+def deactivate_pair(st: State, j: int, k: int,
+                    undo: list | None = None) -> None:
     """Shut pair (j,k) down: drop every remaining admission on it (model
     storage spend + per-type storage), refund the rental, clear y/q/cfg.
-    Callers own the rollback (undo record or snapshot)."""
+    With `undo`, push a record `undo_all` restores exactly; otherwise
+    callers own the rollback (enclosing undo record or snapshot)."""
     inst = st.inst
+    if undo is not None:
+        undo.append(("deact", j, k, float(st.q[j, k]), float(st.y[j, k]),
+                     int(st.cfg[j, k]), st.spend, st.z[:, j, k].copy(),
+                     st.stor_used.copy()))
     others = st.z[:, j, k] > 0.5
     n_other = int(np.count_nonzero(others))
     if n_other:
@@ -521,7 +906,15 @@ def undo_all(st: State, undo: list) -> None:
     raw values, so the state is bitwise-identical to before the moves."""
     while undo:
         rec = undo.pop()
-        if rec[0] == "commit":
+        if rec[0] == "deact":
+            (_, j, k, q0, y0, cfg0, sp0, zcol, stor0) = rec
+            st.stor_used[:] = stor0
+            st.z[:, j, k] = zcol
+            st.q[j, k] = q0
+            st.y[j, k] = y0
+            st.cfg[j, k] = cfg0
+            st.spend = sp0
+        elif rec[0] == "commit":
             (_, i, j, k, x0, z0, q0, cfg0, y0, rr0, e0, d0, sp0,
              kv0, ld0, su0, dvec, unc_had) = rec
             st.x[i, j, k] = x0

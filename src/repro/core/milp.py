@@ -37,13 +37,20 @@ class _Index:
         self.nz = I * J * K
         self.nv = I * J * K * C
         ofs = 0
-        self.ox = ofs; ofs += self.nx
-        self.ou = ofs; ofs += self.nu
-        self.oy = ofs; ofs += self.ny
-        self.oq = ofs; ofs += self.nq
-        self.ow = ofs; ofs += self.nw
-        self.oz = ofs; ofs += self.nz
-        self.ov = ofs; ofs += self.nv
+        self.ox = ofs
+        ofs += self.nx
+        self.ou = ofs
+        ofs += self.nu
+        self.oy = ofs
+        ofs += self.ny
+        self.oq = ofs
+        ofs += self.nq
+        self.ow = ofs
+        ofs += self.nw
+        self.oz = ofs
+        ofs += self.nz
+        self.ov = ofs
+        ofs += self.nv
         self.n = ofs
 
     def x(self, i, j, k): return self.ox + (i * self.J + j) * self.K + k
@@ -66,8 +73,11 @@ def build(inst: Instance):
     def add(entries, lb, ub):
         nonlocal row
         for col, val in entries:
-            rows.append(row); cols.append(col); vals.append(val)
-        lbs.append(lb); ubs.append(ub)
+            rows.append(row)
+            cols.append(col)
+            vals.append(val)
+        lbs.append(lb)
+        ubs.append(ub)
         row += 1
 
     # (8b) sum_jk x + u = 1

@@ -12,8 +12,6 @@ import dataclasses
 import json
 import sys
 
-import numpy as np
-
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()

@@ -13,7 +13,6 @@ planner's eta = 0.9 corresponds to M ≈ 9 * (m - 1) microbatches.
 """
 from __future__ import annotations
 
-import functools
 from typing import Callable
 
 import jax

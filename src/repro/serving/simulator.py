@@ -23,7 +23,6 @@ error of the paper's planning-layer model under load.
 from __future__ import annotations
 
 import dataclasses
-import heapq
 
 import numpy as np
 

@@ -7,7 +7,7 @@ from repro.core import (agh, default_instance, dvr, feasibility, gh, hf,
                         is_feasible, lpr, objective, proc_delay,
                         provisioning_cost, random_instance, solve_milp,
                         stage2_lp)
-from repro.core.mechanisms import State, m1_select
+from repro.core.mechanisms import m1_select
 from repro.core.solution import Solution
 
 

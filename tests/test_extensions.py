@@ -1,7 +1,7 @@
 """Queueing extension + closed-loop simulator (paper future-work items)."""
 import numpy as np
 
-from repro.core import agh, default_instance, gh
+from repro.core import agh, default_instance
 from repro.core.queueing import (queueing_delay, slo_attainment_with_queueing,
                                  utilization, with_queueing_margin)
 from repro.core.solution import proc_delay

@@ -1,0 +1,223 @@
+"""Incremental local-search engine: caches, dirty-source marks, and the
+fallback-rescan convergence guarantee (PR 4).
+
+Five contracts pin the incremental engine:
+
+* the `DestCache` rows feed the exact scoring path bit-identically to the
+  uncached rebuild, across applied moves, drains, and deactivations (the
+  diff-sync / lazy-build machinery can never go stale);
+* the pure scan (`cache` + `improve_below`) selects exactly the move the
+  exhaustive scan's argmin would select — same destination cell, same
+  config — or correctly reports that no admissible improving move exists;
+* dirty-source AGH reaches a converged state in which a full rescan finds
+  no improving relocate move and no drainable pair — the "no improving
+  move is ever missed" guarantee of the fallback verification rescan;
+* incremental and always-rescan batched AGH end at bit-equal objectives
+  on every fixed equivalence instance (the dirty marks change *when*
+  moves are found, never *which* fixed point quality is reached);
+* `deactivate_pair` undo records restore the state bitwise, and the
+  `over=` scalar overrides reproduce the plain cap paths exactly.
+"""
+import numpy as np
+import pytest
+
+from repro.core import agh, default_instance, objective, random_instance
+from repro.core.agh import _improve_batched, _try_drain_batched
+from repro.core.gh import greedy_heuristic
+from repro.core.mechanisms import (DestCache, State, deactivate_pair,
+                                   max_commit, max_commit_batch,
+                                   max_commit_cells, score_moves_batch,
+                                   state_objective, state_snapshot,
+                                   undo_all)
+from repro.core.solution import is_feasible
+
+
+def _suite():
+    return [
+        ("default", default_instance()),
+        ("random-6-6-10", random_instance(6, 6, 10, seed=1)),
+        ("random-8-5-6", random_instance(8, 5, 6, seed=2)),
+        ("random-10-10-10", random_instance(10, 10, 10, seed=3)),
+        ("stressed-1.15", default_instance().stressed(1.15)),
+        ("tight-budget", random_instance(6, 6, 10, seed=4, budget=40.0)),
+        ("random-15-15-10", random_instance(15, 15, 10, seed=7)),
+    ]
+
+
+def sources_of(st: State):
+    return [(int(i), int(f) // st.inst.K, int(f) % st.inst.K)
+            for i in range(st.inst.I)
+            for f in np.flatnonzero((st.x[i] > 1e-9).ravel())]
+
+
+def _assert_states_equal(snap_a, snap_b):
+    for a, b in zip(snap_a, snap_b):
+        if isinstance(a, (set, float)):
+            assert a == b
+        else:
+            assert np.array_equal(a, b)
+
+
+@pytest.mark.parametrize("name,inst", _suite())
+def test_cached_exact_scan_bitwise_matches_uncached(name, inst):
+    """The cache-backed exact path (no improve_below) must produce the
+    same scores as the uncached rebuild — bitwise, since the rows hold
+    the same values — including after moves and drains mutate the state
+    under the cache's feet."""
+    _, st = greedy_heuristic(inst)
+    cache = DestCache(st)
+    srcs = sources_of(st)
+    assert srcs, name
+    for (i, j, k) in srcs[:8]:
+        plain = score_moves_batch(st, i, j, k)
+        cached = score_moves_batch(st, i, j, k, cache=cache)
+        assert np.array_equal(plain.admissible, cached.admissible)
+        assert np.array_equal(plain.caps, cached.caps)
+        assert np.array_equal(plain.obj_after, cached.obj_after)
+        assert plain.obj_removed == cached.obj_removed
+    # Disturb the state through the real engine (moves, drains,
+    # deactivations), then re-compare: the diff-sync must keep up.
+    _improve_batched(st, 3, False)
+    cache2 = DestCache(st)
+    for (i, j, k) in sources_of(st)[:8]:
+        plain = score_moves_batch(st, i, j, k)
+        cached = score_moves_batch(st, i, j, k, cache=cache2)
+        assert np.array_equal(plain.obj_after, cached.obj_after), name
+
+
+@pytest.mark.parametrize("name,inst", _suite())
+def test_pure_scan_selects_exhaustive_argmin(name, inst):
+    """The pure (cache + improve_below) scan is lazy — it reports only
+    the best admissible destination — but that destination must be
+    exactly the argmin of the exhaustive scan's improving admissible
+    set, and its absence must mean the exhaustive set is empty."""
+    _, st = greedy_heuristic(inst)
+    cache = DestCache(st)
+    obj = state_objective(st)
+    before = state_snapshot(st)
+    checked_found = checked_empty = 0
+    for (i, j, k) in sources_of(st):
+        full = score_moves_batch(st, i, j, k)
+        lazy = score_moves_batch(st, i, j, k, improve_below=obj - 1e-9,
+                                 cache=cache, obj_cur=obj)
+        want = full.admissible & (full.obj_after < obj - 1e-9)
+        if lazy.admissible.any():
+            sel = int(np.argmax(lazy.admissible.ravel()))
+            masked = np.where(want, full.obj_after, np.inf)
+            assert want.ravel()[sel], (name, i, j, k)
+            assert sel == int(np.argmin(masked)), (name, i, j, k)
+            assert abs(lazy.obj_after.ravel()[sel]
+                       - full.obj_after.ravel()[sel]) \
+                <= 1e-9 * max(1.0, abs(obj)), (name, i, j, k)
+            checked_found += 1
+        else:
+            assert not want.any(), (name, i, j, k)
+            checked_empty += 1
+    # the scans must leave the state untouched
+    _assert_states_equal(before, state_snapshot(st))
+    assert checked_found + checked_empty > 0, name
+
+
+@pytest.mark.parametrize("name,inst", _suite())
+def test_incremental_converges_to_verified_fixed_point(name, inst):
+    """After `_improve_batched` with dirty-source tracking, a full rescan
+    must find no improving relocate move for any source and no drainable
+    pair — i.e. the approximate invalidation rule deferred moves but the
+    verification rescan guaranteed none was missed."""
+    _, st = greedy_heuristic(inst)
+    _improve_batched(st, 3, False, incremental=True)
+    obj = state_objective(st)
+    for (i, j, k) in sources_of(st):
+        ms = score_moves_batch(st, i, j, k, improve_below=obj - 1e-9)
+        assert not ms.admissible.any(), (name, i, j, k)
+    for f in np.flatnonzero((st.q > 0.5).ravel()):
+        j, k = int(f) // inst.K, int(f) % inst.K
+        assert _try_drain_batched(st, j, k, False) is None, (name, j, k)
+
+
+@pytest.mark.parametrize("name,inst", _suite())
+def test_incremental_bit_equal_to_always_rescan(name, inst):
+    """Full AGH: the incremental engine and the always-rescan engine must
+    end at bit-equal objectives on the fixed equivalence suite (and both
+    feasible, and never worse than reference mode)."""
+    sol_inc = agh(inst, local_search="batched")
+    sol_res = agh(inst, local_search="batched-rescan")
+    oi, orr = objective(inst, sol_inc), objective(inst, sol_res)
+    assert oi == orr, (name, oi, orr)
+    assert is_feasible(inst, sol_inc, enforce_zeta=False), name
+    sol_ref = agh(inst, local_search="reference")
+    assert oi <= objective(inst, sol_ref) + 1e-9, name
+
+
+@pytest.mark.parametrize("name,inst", _suite()[:4])
+def test_per_ordering_incremental_matches_rescan(name, inst):
+    """Per construction state, improvement with and without dirty-source
+    tracking must land on bit-equal objectives (the tracked run may apply
+    moves in a different order, but the verified fixed point it reaches
+    scores identically on these instances)."""
+    for seed in (0, 1):
+        order = np.random.default_rng(seed).permutation(inst.I)
+        _, st_a = greedy_heuristic(inst, order=order)
+        _improve_batched(st_a, 3, False, incremental=True)
+        _, st_b = greedy_heuristic(inst, order=order)
+        _improve_batched(st_b, 3, False, incremental=False)
+        assert state_objective(st_a) == state_objective(st_b), (name, seed)
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_cache_coherent_after_trafficless_drain(seed):
+    """A successful drain must arm the cache's config diff even when the
+    drained pair carried no routed traffic (empty moved-type set) — the
+    cache may never keep scoring a deactivated pair as an active,
+    rental-free destination (regression test)."""
+    from repro.core.agh import _consolidate_batched, _relocate_batched
+    inst = random_instance(12, 12, 10, seed=seed)
+    _, st = greedy_heuristic(inst)
+    cache = DestCache(st)
+    clean: set = set()
+    _relocate_batched(st, 3, False, cache, clean, fallback=False)
+    _consolidate_batched(st, False, cache, clean)
+    assert cache.cfg_dirty or np.array_equal(cache.cfg_seen, st.cfg)
+    if st.x.sum() > 0:
+        i = int(np.argmax(st.x.sum(axis=(1, 2))))
+        cache.rows(st, i)
+        assert np.array_equal(cache.cfg_seen, st.cfg), seed
+
+
+def test_deactivate_pair_undo_is_bitwise_exact():
+    inst = random_instance(8, 5, 6, seed=2)
+    _, st = greedy_heuristic(inst)
+    active = np.argwhere(st.q > 0.5)
+    assert active.size
+    for (j, k) in active[:4]:
+        j, k = int(j), int(k)
+        before = state_snapshot(st)
+        undo: list = []
+        deactivate_pair(st, j, k, undo=undo)
+        assert st.q[j, k] == 0.0 and st.cfg[j, k] == -1
+        undo_all(st, undo)
+        _assert_states_equal(before, state_snapshot(st))
+
+
+@pytest.mark.parametrize("name,inst", _suite()[:4])
+def test_over_scalars_reproduce_plain_cap_paths(name, inst):
+    """`max_commit(..., over=state scalars)` and `max_commit_cells` must
+    equal the plain scalar/batch evaluations bitwise."""
+    _, st = greedy_heuristic(inst)
+    J, K = inst.J, inst.K
+    for i in range(0, inst.I, max(1, inst.I // 4)):
+        over = (float(st.r_rem[i]), st.E_used[i], st.D_used[i],
+                st.stor_used[i], st.spend)
+        c_arr = np.where(st.q > 0.5, st.cfg, inst.cfg_m1[i])
+        caps = max_commit_batch(st, i, c_arr)
+        cells = np.flatnonzero((c_arr >= 0).ravel())
+        from repro.core.mechanisms import delay_sel
+        d_sel = delay_sel(inst, i, c_arr)
+        caps_c = max_commit_cells(st, i, cells, c_arr.ravel()[cells],
+                                  d_sel.ravel()[cells], over=over)
+        assert np.array_equal(caps.ravel()[cells], caps_c), name
+        for f in cells[:6]:
+            j, k = int(f) // K, int(f) % K
+            c = int(c_arr[j, k])
+            assert max_commit(st, i, j, k, c) \
+                == max_commit(st, i, j, k, c, over=over), (name, i, j, k)

@@ -16,7 +16,7 @@ import pytest
 
 from repro.core import (default_instance, greedy_heuristic, is_feasible,
                         objective, random_instance)
-from repro.core.mechanisms import (State, commit, max_commit,
+from repro.core.mechanisms import (commit, max_commit,
                                    remove_assignment, solution_from_state,
                                    state_objective, state_restore,
                                    state_snapshot, undo_all)
@@ -104,7 +104,6 @@ def test_random_moves_match_from_scratch(name, st):
 
 @pytest.mark.parametrize("name,st", _states())
 def test_snapshot_restore_is_exact(name, st):
-    inst = st.inst
     before = _fields(st)
     snap = state_snapshot(st)
     rng = np.random.default_rng(1)

@@ -10,7 +10,7 @@ a given demand profile is invariant to how finely the day is windowed —
 import numpy as np
 import pytest
 
-from repro.core import Solution, default_instance, gh, objective, rolling
+from repro.core import Solution, default_instance, gh, rolling
 from repro.core import replay_study
 from repro.core._scalar_ref import stage2_lp_ref
 from repro.core.rolling import STRICT_CAP, _ewma_forecasts

@@ -1,8 +1,5 @@
 """Training loop, data pipeline, checkpointing, serving engine, rolling."""
-import os
-
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
