@@ -1,27 +1,32 @@
-"""Allocator scaling: before/after rows for the vectorized engine.
+"""Allocator scaling: registry-keyed rows for every engine generation.
 
-Up to four points per size and method so every engine generation is
-visible in CI logs:
+Each row is one instance size; solver columns are sub-dicts keyed by the
+planner-registry name (plus a ``+variant`` suffix for non-default engine
+modes), produced directly from `PlanResult.summary()` — the CI
+regression gate (`benchmarks/check_regression.py`) flattens and diffs
+them against the committed baseline:
 
-* ``before``   — the frozen scalar seed path (`_scalar_ref`, pre-PR-1);
-* ``ref``      — AGH with ``local_search="reference"`` (the PR-1/PR-2
-                 vectorized engine with the first-improvement probe loop);
-* ``rescan``   — the PR-3-style batched engine with dirty-source tracking
-                 disabled (``local_search="batched-rescan"``);
-* ``after``    — the PR-4 incremental engine (amortized destination
-                 tensors + dirty-source tracking, the default).
+* ``gh``             — vectorized GH through the facade;
+* ``agh``            — the incremental engine (default);
+* ``agh+rescan``     — dirty-source tracking disabled (PR-3-style);
+* ``agh+reference``  — the PR-1/PR-2 first-improvement probe loop;
+* ``agh+warm``       — `PlanSession.replan` on a ±15% drifted demand
+  vector, seeded from the undrifted incumbent, next to the cold AGH
+  solve of the same drifted instance (``cold_*`` fields + ``speedup``);
+* flat ``GH_before_us`` / ``AGH_before_us`` — the frozen scalar seed
+  path, kept at sizes where it finishes in seconds.
 
-Emits one ``name,us_per_call`` row per (size, method, path) so perf
-regressions show up directly in CI logs, and returns row dicts carrying
-the objectives — `benchmarks/check_regression.py` diffs those against the
-committed baseline.  The scalar/reference paths are capped at sizes where
-they finish in seconds; for larger sizes only the fast rows are emitted
-(the scalar cost is the reason the engine exists).
+Emits one ``name,us_per_call`` line per cell so perf regressions show up
+directly in CI logs.
 """
 from __future__ import annotations
 
-from repro.core import agh, gh, objective, random_instance
+import numpy as np
+
+from repro.core import random_instance
 from repro.core._scalar_ref import agh_scalar, gh_scalar
+from repro.core.solution import objective
+from repro.planner import PlanOptions, PlanResult, PlanSession, plan
 
 from .common import Timer, emit
 
@@ -34,16 +39,28 @@ QUICK_SIZES = [(6, 6, 10), (20, 20, 20)]
 SCALAR_AGH_MAX = 10 * 10 * 10   # scalar AGH above this takes minutes
 SCALAR_GH_MAX = 30 * 30 * 20    # scalar GH above this takes tens of seconds
 REF_AGH_MAX = 100 * 80 * 40     # reference-mode AGH above this: minutes
+DRIFT_PM = 0.15                 # warm-replan demo: ±15% per-type demand
+
+
+def _cell(row: dict, size: str, key: str, inst,
+          options=None) -> PlanResult:
+    """One facade solve -> registry-keyed summary + CSV line."""
+    solver = key.split("+")[0]
+    res = plan(solver, instance=inst, options=options or PlanOptions())
+    row[key] = res.summary()
+    emit(f"allocator_scaling.{size}.{key}", res.wall_s * 1e6,
+         f"obj={res.objective:.2f}")
+    return res
 
 
 def run(sizes=SIZES, scalar_agh_max: int = SCALAR_AGH_MAX,
         scalar_gh_max: int = SCALAR_GH_MAX,
-        ref_agh_max: int = REF_AGH_MAX) -> list[dict]:
+        ref_agh_max: int = REF_AGH_MAX, warm_demo: bool = True) -> list[dict]:
     rows = []
     for (I, J, K) in sizes:
         inst = random_instance(I, J, K, seed=42)
         size = f"({I},{J},{K})"
-        row = dict(size=size)
+        row: dict = dict(size=size)
 
         if I * J * K <= scalar_gh_max:
             with Timer() as t:
@@ -51,15 +68,7 @@ def run(sizes=SIZES, scalar_agh_max: int = SCALAR_AGH_MAX,
             row["GH_before_us"] = t.us
             emit(f"allocator_scaling.{size}.GH.before", t.us,
                  f"obj={objective(inst, g_ref):.2f}")
-
-        with Timer() as t:
-            g_vec = gh(inst)
-        row["GH_after_us"] = t.us
-        row["GH_obj"] = round(objective(inst, g_vec), 4)
-        derived = f"obj={row['GH_obj']:.2f}"
-        if "GH_before_us" in row:
-            derived += f";speedup={row['GH_before_us'] / max(t.us, 1e-9):.1f}x"
-        emit(f"allocator_scaling.{size}.GH.after", t.us, derived)
+        _cell(row, size, "gh", inst)
 
         if I * J * K <= scalar_agh_max:
             with Timer() as t:
@@ -67,32 +76,38 @@ def run(sizes=SIZES, scalar_agh_max: int = SCALAR_AGH_MAX,
             row["AGH_before_us"] = t.us
             emit(f"allocator_scaling.{size}.AGH.before", t.us,
                  f"obj={objective(inst, a_ref):.2f}")
-
         if I * J * K <= ref_agh_max:
-            with Timer() as t:
-                a_mode_ref = agh(inst, local_search="reference")
-            row["AGH_ref_us"] = t.us
-            row["AGH_ref_obj"] = round(objective(inst, a_mode_ref), 4)
-            emit(f"allocator_scaling.{size}.AGH.ref", t.us,
-                 f"obj={row['AGH_ref_obj']:.2f}")
+            _cell(row, size, "agh+reference", inst,
+                  PlanOptions(local_search="reference"))
+        _cell(row, size, "agh+rescan", inst,
+              PlanOptions(local_search="batched-rescan"))
+        agh_res = _cell(row, size, "agh", inst)
 
-        with Timer() as t:
-            a_rescan = agh(inst, local_search="batched-rescan")
-        row["AGH_rescan_us"] = t.us
-        row["AGH_rescan_obj"] = round(objective(inst, a_rescan), 4)
-        emit(f"allocator_scaling.{size}.AGH.rescan", t.us,
-             f"obj={row['AGH_rescan_obj']:.2f}")
-
-        with Timer() as t:
-            a_vec = agh(inst)
-        row["AGH_after_us"] = t.us
-        row["AGH_obj"] = round(objective(inst, a_vec), 4)
-        derived = f"obj={row['AGH_obj']:.2f}"
-        if "AGH_ref_us" in row:
-            derived += f";ls_speedup={row['AGH_ref_us'] / max(t.us, 1e-9):.1f}x"
-        if "AGH_before_us" in row:
-            derived += f";speedup={row['AGH_before_us'] / max(t.us, 1e-9):.1f}x"
-        emit(f"allocator_scaling.{size}.AGH.after", t.us, derived)
+        if warm_demo:
+            # Warm-started replanning (ISSUE 5 acceptance): drift every
+            # type's demand by ±15%, solve cold, then replan warm from the
+            # undrifted incumbent.  The session is seeded with the `agh`
+            # row's result (no duplicate cold solve); the drifted cold
+            # comparator and the replan both run the sequential driver
+            # (workers=0) so the comparison is machine-independent.
+            drift = np.random.default_rng(7).uniform(
+                1.0 - DRIFT_PM, 1.0 + DRIFT_PM, inst.I)
+            drifted = inst.with_lam(inst.lam * drift)
+            cold = plan("agh", instance=drifted,
+                        options=PlanOptions(workers=0))
+            ses = PlanSession(options=PlanOptions(workers=0))
+            ses.seed(inst, agh_res)
+            warm = ses.replan(instance=drifted)
+            row["agh+warm"] = {
+                **warm.summary(),
+                "cold_objective": round(cold.objective, 4),
+                "cold_wall_s": round(cold.wall_s, 4),
+                "speedup": round(cold.wall_s / max(warm.wall_s, 1e-9), 2),
+                "orderings": warm.diagnostics.get("orderings_evaluated"),
+            }
+            emit(f"allocator_scaling.{size}.agh+warm", warm.wall_s * 1e6,
+                 f"obj={warm.objective:.2f};cold_obj={cold.objective:.2f};"
+                 f"speedup={row['agh+warm']['speedup']:.2f}x")
         rows.append(row)
     return rows
 

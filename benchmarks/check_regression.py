@@ -40,9 +40,11 @@ from .common import JSON_SCHEMA_VERSION
 
 DEFAULT_BASELINE = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                                 "baselines", "ci_baseline.json")
-# DM is an anytime MILP under a time limit: its incumbent objective and
-# the AGH gap derived from it vary with machine speed — never gated.
-SKIP_KEY_PREFIXES = ("DM_", "AGH_gap")
+# DM/milp is an anytime MILP under a time limit: its incumbent objective
+# and the AGH gap derived from it vary with machine speed — never gated.
+# Prefixes match the FLATTENED key (registry-keyed sub-dicts flatten to
+# "<solver>.<field>", so "milp." covers every exact-solver column).
+SKIP_KEY_PREFIXES = ("DM_", "AGH_gap", "milp.", "dm.", "agh_gap")
 
 
 def _is_runtime_key(key: str) -> bool:
@@ -50,11 +52,25 @@ def _is_runtime_key(key: str) -> bool:
 
 
 def _is_objective_key(key: str) -> bool:
-    return key.endswith("_obj")
+    return key.endswith("_obj") or key.endswith("objective")
 
 
 def _runtime_seconds(key: str, val: float) -> float:
     return val / 1e6 if key.endswith("_us") else val
+
+
+def _flatten(row: dict) -> dict:
+    """Registry-keyed rows carry solver sub-dicts (`PlanResult.summary()`
+    per registered solver); flatten one level to "<solver>.<field>" so
+    the objective/runtime key rules below apply uniformly."""
+    flat: dict = {}
+    for key, val in row.items():
+        if isinstance(val, dict):
+            for k2, v2 in val.items():
+                flat[f"{key}.{k2}"] = v2
+        else:
+            flat[key] = val
+    return flat
 
 
 def check(baseline: dict, fresh_sections: dict, objective_rtol: float,
@@ -77,7 +93,8 @@ def check(baseline: dict, fresh_sections: dict, objective_rtol: float,
             if fresh is None:
                 failures.append(f"{section} {size}: row missing")
                 continue
-            for key, base_val in base_row.items():
+            fresh = _flatten(fresh)
+            for key, base_val in _flatten(base_row).items():
                 if key == "size" or key.startswith(SKIP_KEY_PREFIXES):
                     continue
                 if not isinstance(base_val, (int, float)):

@@ -7,7 +7,10 @@ import time
 
 # JSON dump schema, bumped whenever the row-dict layout changes in a way
 # the regression gate must not silently accept (see check_regression.py).
-JSON_SCHEMA_VERSION = 2
+# v3: solver columns are registry-keyed sub-dicts (`PlanResult.summary()`
+# rows keyed by the planner-registry solver name, e.g. "gh"/"agh"/
+# "agh+reference") instead of flat per-method key prefixes.
+JSON_SCHEMA_VERSION = 3
 
 _made_dirs: set[str] = set()
 

@@ -11,9 +11,10 @@ ext3 — closed-loop validation: discrete-event simulation of the planned
 """
 from __future__ import annotations
 
-from repro.core import agh, default_instance, gh, provisioning_cost
+from repro.core import default_instance, provisioning_cost
 from repro.core.queueing import (slo_attainment_with_queueing,
                                  with_queueing_margin)
+from repro.planner import plan
 from repro.serving.simulator import simulate
 
 from .common import Timer, emit
@@ -21,7 +22,7 @@ from .common import Timer, emit
 
 def run() -> None:
     inst = default_instance()
-    plans = [("GH", gh(inst)), ("AGH", agh(inst))]
+    plans = [(n, plan(n, instance=inst).solution) for n in ("gh", "agh")]
 
     # ext1: queueing audit of load-free plans
     for name, sol in plans:
@@ -36,7 +37,8 @@ def run() -> None:
     for budget in (100.0, 150.0):
         inst_b = default_instance(budget=budget)
         with Timer() as t:
-            sol_m = agh(with_queueing_margin(inst_b, rho_max=0.5))
+            sol_m = plan("agh", instance=with_queueing_margin(
+                inst_b, rho_max=0.5)).solution
         q = slo_attainment_with_queueing(inst_b, sol_m)
         emit(f"ext2.rho_max0.5.budget{int(budget)}", t.us,
              f"stage1=${provisioning_cost(inst_b, sol_m):.1f};"
@@ -54,7 +56,7 @@ def run() -> None:
     for cp, extra_budget in ((0.60, 0.0), (0.60, 30.0), (2.00, 60.0)):
         inst_c = default_instance(budget=100.0 + extra_budget)
         ci = carbon_priced(inst_c, carbon_price=cp, intensity=intensity)
-        sol_c = agh(ci)
+        sol_c = plan("agh", instance=ci).solution
         emit(f"ext4.carbon.p{cp:.2f}.b{int(100+extra_budget)}", 0.0,
              f"emissions={emissions(inst_c, sol_c):.1f}kg;"
              f"stage1=${provisioning_cost(inst_c, sol_c):.1f};"
@@ -62,8 +64,10 @@ def run() -> None:
 
     # ext3: closed-loop simulation (load-free vs margin-planned)
     inst150 = default_instance(budget=150.0)
-    cases = [("AGH_loadfree", agh(inst), inst),
-             ("AGH_rho0.5_b150", agh(with_queueing_margin(inst150, 0.5)),
+    cases = [("AGH_loadfree", plan("agh", instance=inst).solution, inst),
+             ("AGH_rho0.5_b150",
+              plan("agh",
+                   instance=with_queueing_margin(inst150, 0.5)).solution,
               inst150)]
     for name, sol, icase in cases:
         st = simulate(icase, sol, horizon_s=300.0, rate_scale=0.02, seed=1)

@@ -12,29 +12,35 @@ import dataclasses
 
 import numpy as np
 
-from repro.core import (agh, default_instance, dvr, evaluate, gh, hf, lpr,
-                        solve_milp)
+from repro.core import default_instance, evaluate
+from repro.planner import PlanOptions, plan
 
 from .common import emit
+
+
+def _sol(solver: str, inst, **opt):
+    """Registry-facade solve returning the bare Solution."""
+    return plan(solver, instance=inst, options=PlanOptions(**opt)).solution
 
 
 def fig2_budget(S: int = 60, budgets=(72, 75, 80, 90, 100, 120)) -> None:
     for b in budgets:
         inst = default_instance(budget=float(b))
-        for name, fn in (("GH", gh), ("AGH", agh), ("HF", hf)):
-            r = evaluate(inst, fn(inst), S=S, u_cap=np.full(6, 0.02))
+        for name in ("gh", "agh", "hf"):
+            r = evaluate(inst, _sol(name, inst), S=S, u_cap=np.full(6, 0.02))
             emit(f"fig2.budget{b}.{name}", 0.0,
                  f"cost=${r.expected_cost:.1f};viol={100*r.violation_rate:.1f}%")
 
 
 def fig3_stress(S: int = 60, alphas=(1.0, 1.1, 1.2, 1.35, 1.5)) -> None:
     inst = default_instance()
-    plans = [("GH", gh(inst)), ("AGH", agh(inst)), ("LPR", lpr(inst)),
-             ("DVR", dvr(inst)), ("HF", hf(inst))]
+    plans = [("gh", _sol("gh", inst)), ("agh", _sol("agh", inst)),
+             ("lpr", _sol("lpr", inst, time_limit=120.0)),
+             ("dvr", _sol("dvr", inst)), ("hf", _sol("hf", inst))]
     for alpha in alphas:
         stressed = inst.stressed(alpha)
-        for name, plan in plans:
-            r = evaluate(stressed, plan, S=S, d_infl=0.0, e_infl=0.0,
+        for name, dep in plans:
+            r = evaluate(stressed, dep, S=S, d_infl=0.0, e_infl=0.0,
                          u_cap=np.full(6, 0.02))
             emit(f"fig3.a{alpha:.2f}.{name}", 0.0,
                  f"cost=${r.expected_cost:.1f};viol={100*r.violation_rate:.1f}%")
@@ -43,26 +49,26 @@ def fig3_stress(S: int = 60, alphas=(1.0, 1.1, 1.2, 1.35, 1.5)) -> None:
 def fig4_unmet_cap(S: int = 60, caps=(0.01, 0.02, 0.05, 1.0),
                    include_dm: bool = False) -> None:
     inst = default_instance()
-    plans = [("GH", gh(inst)), ("AGH", agh(inst)), ("HF", hf(inst))]
+    plans = [(n, _sol(n, inst)) for n in ("gh", "agh", "hf")]
     if include_dm:
-        plans.append(("DM", solve_milp(inst, time_limit=180)))
+        plans.append(("milp", _sol("milp", inst, time_limit=180.0)))
     for cap in caps:
         label = "soft" if cap >= 1.0 else f"{int(cap*100)}pct"
-        for name, plan in plans:
-            r = evaluate(inst, plan, S=S, u_cap=np.full(6, cap))
+        for name, dep in plans:
+            r = evaluate(inst, dep, S=S, u_cap=np.full(6, cap))
             emit(f"fig4.cap_{label}.{name}", 0.0,
                  f"cost=${r.expected_cost:.1f};viol={100*r.violation_rate:.1f}%")
 
 
 def fig5_stress_panels(S: int = 60, include_dm: bool = True) -> None:
     inst = default_instance()
-    plans = [("GH", gh(inst)), ("AGH", agh(inst))]
+    plans = [(n, _sol(n, inst)) for n in ("gh", "agh")]
     if include_dm:
-        plans.append(("DM", solve_milp(inst, time_limit=180)))
+        plans.append(("milp", _sol("milp", inst, time_limit=180.0)))
     for alpha in (1.0, 1.2, 1.5):
         stressed = inst.stressed(alpha)
-        for name, plan in plans:
-            r = evaluate(stressed, plan, S=S, d_infl=0.0, e_infl=0.0,
+        for name, dep in plans:
+            r = evaluate(stressed, dep, S=S, d_infl=0.0, e_infl=0.0,
                          u_cap=np.full(6, 0.02))
             emit(f"fig5.stress{alpha:.1f}.{name}", 0.0,
                  f"cost=${r.expected_cost:.1f};viol={100*r.violation_rate:.1f}%")
@@ -73,7 +79,7 @@ def fig5_stress_panels(S: int = 60, include_dm: bool = True) -> None:
             mod.Delta = inst.Delta * dscale
             mod.eps = inst.eps * escale
             mod.__post_init__()
-            sol = agh(mod)
+            sol = _sol("agh", mod)
             from repro.core import objective, provisioning_cost
             emit(f"fig5d.D{dscale:.1f}.e{escale:.1f}.AGH", 0.0,
                  f"obj=${objective(mod, sol):.1f};"
@@ -83,7 +89,7 @@ def fig5_stress_panels(S: int = 60, include_dm: bool = True) -> None:
         mod = dataclasses.replace(inst)
         mod.p_c = inst.p_c * pscale
         mod.__post_init__()
-        sol = agh(mod)
+        sol = _sol("agh", mod)
         from repro.core import objective
         pairs = int(np.sum(sol.q))
         emit(f"fig5e.p{pscale:.2f}.AGH", 0.0,

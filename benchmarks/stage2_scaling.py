@@ -13,7 +13,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core import evaluate, gh, random_instance, default_instance
+from repro.core import default_instance, evaluate, gh, random_instance
 from repro.core import replay_study
 from repro.core._scalar_ref import stage2_lp_ref
 from repro.core.stage2 import stage2_cost

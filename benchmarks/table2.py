@@ -2,26 +2,29 @@
 
 Scenarios (paper §5.2): S1 default (delta=$100, phi_v=1x); S2 tight ($75);
 S3 critical ($72); S4 high penalty ($75, phi_v=5x); S5 high penalty +
-critical ($72, phi_v=5x). Methods: GH, AGH, LPR, DVR, HF (+DM optionally).
+critical ($72, phi_v=5x). Methods: every registered heuristic solver
+(gh, agh, lpr, dvr, hf; + milp optionally) — the grid is driven by the
+planner registry, so a newly registered solver shows up as a new column
+without touching this file.
 Metrics: Stage-1 cost, expected cost over S perturbed scenarios, SLO
 violation rate (>1% unserved per (scenario, type)).
 
-With ``workers`` (``benchmarks.run --workers``), the 5 scenarios x 5
+With ``workers`` (``benchmarks.run --workers``), the 5 scenarios x N
 methods cells are batched through ONE shared process pool — each cell
 (plan + S-scenario Stage-2 evaluation) is independent, so the grid
 parallelizes embarrassingly; results are gathered and emitted in the
 canonical scenario/method order, so the output is identical to the
-sequential path's.  Inside a pooled cell the Stage-2 ``workers=`` fan-out
-stays off (the pool already owns the cores).
+sequential path's.  Inside a pooled cell the Stage-2 ``workers=``
+fan-out stays off (the pool already owns the cores).
 """
 from __future__ import annotations
 
 import numpy as np
 
-from repro.core import (agh, default_instance, dvr, evaluate, gh, hf, lpr,
-                        solve_milp)
+from repro.core import default_instance, evaluate
+from repro.planner import PlanOptions, plan
 
-from .common import Timer, emit
+from .common import emit
 
 SCENARIOS = {
     "S1": dict(budget=100.0, phi_v_mult=1.0),
@@ -31,34 +34,33 @@ SCENARIOS = {
     "S5": dict(budget=72.0, phi_v_mult=5.0),
 }
 
-_METHODS = {"GH": gh, "AGH": agh, "LPR": lpr, "DVR": dvr, "HF": hf}
+METHODS = ("gh", "agh", "lpr", "dvr", "hf")
 
 
 def _run_cell(args: tuple) -> tuple[dict, float]:
-    """One (scenario, method) cell: plan on the forecast instance, then the
-    frozen-deployment Stage-2 evaluation.  Module-level and driven by
-    picklable primitives so a process pool can run it."""
+    """One (scenario, method) cell: plan on the forecast instance through
+    the registry facade, then the frozen-deployment Stage-2 evaluation.
+    Module-level and driven by picklable primitives so a process pool can
+    run it."""
     sname, inst_kw, mname, S, u_cap, dm_limit = args
     inst = default_instance(seed=0, **inst_kw)
-    if mname == "DM":
-        fn = lambda i: solve_milp(i, time_limit=dm_limit)
-    else:
-        fn = _METHODS[mname]
-    with Timer() as t:
-        sol = fn(inst)
-    res = evaluate(inst, sol, S=S, u_cap=u_cap)
+    # dm_limit caps the exact solver only; the other backends keep their
+    # own defaults (LPR: 120 s) so --dm-limit never changes the baselines.
+    limit = dm_limit if mname in ("milp", "dm") else None
+    res = plan(mname, instance=inst, options=PlanOptions(time_limit=limit))
+    ev = evaluate(inst, res.solution, S=S, u_cap=u_cap)
     row = dict(scenario=sname, method=mname,
-               stage1=round(res.stage1_cost, 1),
-               cost=round(res.expected_cost, 1),
-               viol_pct=round(100 * res.violation_rate, 1),
-               plan_s=round(sol.runtime_s, 3))
-    return row, t.us
+               stage1=round(ev.stage1_cost, 1),
+               cost=round(ev.expected_cost, 1),
+               viol_pct=round(100 * ev.violation_rate, 1),
+               plan_s=round(res.wall_s, 3))
+    return row, res.wall_s * 1e6
 
 
 def run(S: int = 100, include_dm: bool = False, dm_limit: float = 180.0,
         u_cap: float = 1.0, workers: int | None = None) -> list[dict]:
     cap = np.full(6, u_cap)
-    methods = list(_METHODS) + (["DM"] if include_dm else [])
+    methods = list(METHODS) + (["milp"] if include_dm else [])
     cells = [(sname, kw, mname, S, cap, dm_limit)
              for sname, kw in SCENARIOS.items() for mname in methods]
     import multiprocessing as mp

@@ -1,13 +1,16 @@
 """Table 5 / Fig. 6: rolling-horizon cost on the (synthetic replica of the)
 Azure diurnal trace — static vs 5-minute keep-best re-optimization for
-AGH, GH, DM and the external baselines."""
+AGH, GH, DM and the external baselines, all driven through the planner
+registry.  The 5-minute AGH column rides a `PlanSession`, so every
+window after the first is a warm-started replan."""
 from __future__ import annotations
 
 import numpy as np
 
-from repro.core import agh, default_instance, dvr, gh, hf, lpr, solve_milp
+from repro.core import default_instance
 from repro.core.rolling import rolling
 from repro.core.trace import diurnal_multipliers, peak_to_trough
+from repro.planner import PlanOptions, PlanSession, plan
 
 from .common import emit
 
@@ -20,25 +23,31 @@ def run(n_windows: int = 288, day: str = "busy", dm_limit: float = 120.0,
     print(f"# trace day={day} peak/trough={peak_to_trough(mult):.1f}x",
           flush=True)
 
+    def facade(mname, **opt):
+        return lambda i: plan(mname, instance=i,
+                              options=PlanOptions(**opt)).solution
+
     methods: list[tuple[str, object, object]] = [
-        # (name, static planner, rolling planner or None)
-        ("AGH", lambda i: agh(i), lambda i: agh(i, R=1, patience=2)),
-        ("GH", lambda i: gh(i), lambda i: gh(i)),
-        ("DM", lambda i: solve_milp(i, time_limit=dm_limit),
-         lambda i: solve_milp(i, time_limit=15.0)),
+        # (name, static planner, rolling planner)
+        ("AGH", facade("agh"),
+         PlanSession(solver="agh",
+                     options=PlanOptions(restarts=1, patience=2))),
+        ("GH", facade("gh"), facade("gh")),
+        ("DM", facade("milp", time_limit=dm_limit),
+         facade("milp", time_limit=15.0)),
     ]
     if include_baselines:
-        methods += [("HF", lambda i: hf(i), lambda i: hf(i)),
-                    ("LPR", lambda i: lpr(i, time_limit=30),
-                     lambda i: lpr(i, time_limit=10)),
-                    ("DVR", lambda i: dvr(i), lambda i: dvr(i))]
+        methods += [("HF", facade("hf"), facade("hf")),
+                    ("LPR", facade("lpr", time_limit=30),
+                     facade("lpr", time_limit=10)),
+                    ("DVR", facade("dvr"), facade("dvr"))]
 
     rows = []
     for name, static_fn, roll_fn in methods:
         # Paper protocol: the static variant plans on the DAY-AVERAGE
         # forecast; the diurnal swing around that mean is what stresses it.
-        plan = static_fn(inst.with_lam(path.mean(axis=0)))
-        r_static = rolling(inst, path, lambda i, p=plan: p, replan_every=None)
+        dep = static_fn(inst.with_lam(path.mean(axis=0)))
+        r_static = rolling(inst, path, lambda i, p=dep: p, replan_every=None)
         rows.append(dict(method=f"{name}-static",
                          mean_win=r_static.mean_window_cost,
                          total=r_static.total_cost,

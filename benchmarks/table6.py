@@ -3,29 +3,30 @@
 Paper: DM exceeds 600 s at (15,15,10); GH < 1 s and AGH < 3 s everywhere
 (>= 260x speedup at (20,20,20)).
 
-The heuristic columns run on the vectorized allocation engine.  Three
-"before" references are timed next to it: the frozen scalar seed GH
-(`_scalar_ref.gh_scalar`, capped at `SCALAR_GH_MAX` — it takes tens of
-seconds beyond (30,30,20)), and AGH in ``local_search="reference"`` mode
-(the PR-2 first-improvement engine) so the batched-local-search speedup is
-visible per size.
+Rows are registry-keyed (schema v3): each solver column is the
+`PlanResult.summary()` sub-dict of one facade solve — ``gh``, ``agh``,
+``agh+reference`` (the PR-2 first-improvement engine, capped at
+`REF_AGH_MAX`), and ``milp`` (the exact DM; an anytime incumbent under
+``dm_limit``, so the CI gate skips its columns).  The frozen scalar seed
+GH is timed next to them as flat ``GH_before_s`` (capped at
+`SCALAR_GH_MAX` — it takes tens of seconds beyond (30,30,20)).
 
-DM column: `dm_max_size` bounds the largest I*J*K for which the exact MILP
-is attempted — the unified default of 1000 runs DM through (10,10,10) and
-skips it above (at (15,15,10) the paper already reports >600 s; the CLI's
-``--dm-max-size`` raises the bound for full-replication runs, as does
-``benchmarks.run --full``).  Skipped rows show ``DM_s = skipped(>size)``.
+DM column: `dm_max_size` bounds the largest I*J*K for which the exact
+MILP is attempted — the unified default of 1000 runs DM through
+(10,10,10) and skips it above (at (15,15,10) the paper already reports
+>600 s; the CLI's ``--dm-max-size`` raises the bound for
+full-replication runs, as does ``benchmarks.run --full``).  Skipped rows
+show ``DM_s = skipped(>size)``.
 
 ``SIZES_EXT`` (CLI ``--ext``) pushes past the paper's largest instance:
 (30,30,20) from PR 1, the PR-3 beyond-paper sizes (40,40,30), (60,60,40)
 and (100,80,40), and the PR-4 fleet-scale points (150,120,60) and
-(200,160,80).  ``local_search="reference"`` timing is capped at
-`REF_AGH_MAX` — beyond (100,80,40) the first-improvement engine takes
-minutes and the incremental engine is the only practical path."""
+(200,160,80)."""
 from __future__ import annotations
 
-from repro.core import agh, gh, objective, random_instance, solve_milp
+from repro.core import random_instance
 from repro.core._scalar_ref import gh_scalar
+from repro.planner import PlanOptions, plan
 
 from .common import Timer, emit
 
@@ -42,33 +43,32 @@ def run(dm_limit: float = 600.0, dm_max_size: int = DM_MAX_SIZE,
     rows = []
     for (I, J, K) in sizes:
         inst = random_instance(I, J, K, seed=42)
-        row = dict(size=f"({I},{J},{K})")
-        g = gh(inst)
-        row["GH_s"] = round(g.runtime_s, 3)
-        row["GH_obj"] = round(objective(inst, g), 1)
+        row: dict = dict(size=f"({I},{J},{K})")
+        row["gh"] = plan("gh", instance=inst).summary()
         if include_before and I * J * K <= SCALAR_GH_MAX:
             with Timer() as t:
                 gh_scalar(inst)
             row["GH_before_s"] = round(t.dt, 3)
-        a = agh(inst)
-        row["AGH_s"] = round(a.runtime_s, 3)
-        row["AGH_obj"] = round(objective(inst, a), 1)
+        a = plan("agh", instance=inst)
+        row["agh"] = a.summary()
         if include_before and I * J * K <= REF_AGH_MAX:
-            a_ref = agh(inst, local_search="reference")
-            row["AGH_ref_s"] = round(a_ref.runtime_s, 3)
+            row["agh+reference"] = plan(
+                "agh", instance=inst,
+                options=PlanOptions(local_search="reference")).summary()
         if I * J * K <= dm_max_size:
-            d = solve_milp(inst, time_limit=dm_limit)
-            row["DM_s"] = round(d.runtime_s, 2)
-            row["DM_obj"] = (round(objective(inst, d), 1)
-                             if d.method == "DM" else "timeout")
-            if d.method == "DM":
+            d = plan("milp", instance=inst,
+                     options=PlanOptions(time_limit=dm_limit))
+            row["milp"] = d.summary()
+            solved = not d.diagnostics.get("timed_out", False)
+            row["milp"]["status"] = d.diagnostics.get("status")
+            if solved:
                 row["AGH_gap_pct"] = round(
-                    100 * (row["AGH_obj"] - row["DM_obj"])
-                    / max(row["DM_obj"], 1e-9), 2)
+                    100 * (a.objective - d.objective)
+                    / max(d.objective, 1e-9), 2)
         else:
             row["DM_s"] = f"skipped(>{dm_max_size})"
         rows.append(row)
-        emit(f"table6.{row['size']}", row["AGH_s"] * 1e6,
+        emit(f"table6.{row['size']}", row["agh"]["wall_s"] * 1e6,
              ";".join(f"{k}={v}" for k, v in row.items() if k != "size"))
     return rows
 

@@ -1,40 +1,63 @@
-"""Quickstart: plan a heterogeneous serving fleet with the paper's
-allocator in <5 seconds.
+"""Quickstart: plan a heterogeneous serving fleet through the unified
+planner API in <5 seconds.
 
     PYTHONPATH=src python examples/quickstart.py
+
+Shows the whole surface: named scenario specs, the solver registry, the
+structured `PlanResult` (cost breakdown, per-constraint slack, solver
+diagnostics), and warm-started replanning with `PlanSession`.
 """
 import numpy as np
 
-from repro.core import (agh, default_instance, evaluate, gh, objective,
-                        provisioning_cost)
+from repro import PlanSession, list_scenarios, plan, scenario, solver_names
+from repro.core import evaluate
 from repro.core.bridge import to_deployment
 
 
 def main() -> None:
-    # The paper's base instance: 6 query types, 6 Llama-3.x models,
-    # 10 GPU tiers (hardware x precision), $100/day budget.
-    inst = default_instance()
-    print("Query types:", list(inst.query_names))
-    print("Models:", list(inst.model_names))
-    print(f"Tiers: {len(inst.tier_names)} (e.g. {inst.tier_names[:3]})")
+    # The paper's base scenario: 6 query types (Azure-trace-calibrated),
+    # 6 Llama-3.x models, 10 GPU tiers, $100/day budget.
+    spec = scenario("paper-default")
+    inst = spec.build()
+    print("Registered solvers:", ", ".join(solver_names()))
+    print("Registered scenarios:", ", ".join(list_scenarios()))
+    print(f"Scenario '{spec.name}': {inst.I} query types, "
+          f"{inst.J} models, {inst.K} tiers")
 
-    for solver in (gh, agh):
-        sol = solver(inst)
-        print(f"\n{sol.method}: solved in {sol.runtime_s*1e3:.0f} ms, "
-              f"objective ${objective(inst, sol):.2f}, "
-              f"stage-1 ${provisioning_cost(inst, sol):.2f}, "
-              f"unmet max {sol.u.max():.1%}")
-        for p in to_deployment(inst, sol).pairs:
-            routed = ", ".join(f"{q}:{frac:.0%}" for q, frac in p.routing.items())
+    for solver in ("gh", "agh"):
+        res = plan(solver, instance=inst)
+        cb = res.cost_breakdown
+        print(f"\n{solver}: solved in {res.wall_s*1e3:.0f} ms, "
+              f"objective ${res.objective:.2f} "
+              f"(rental ${cb['rental']:.2f} + penalties "
+              f"${cb['delay_penalty'] + cb['unmet_penalty']:.2f}), "
+              f"feasible={res.feasible}")
+        print("  binding slack: " + ", ".join(
+            f"{k}={v:.3g}" for k, v in sorted(res.slack.items(),
+                                              key=lambda kv: kv[1])[:3]))
+        for p in to_deployment(inst, res.solution).pairs:
+            routed = ", ".join(f"{q}:{frac:.0%}"
+                               for q, frac in p.routing.items())
             print(f"  {p.model} on {p.tier}: TP={p.tp} PP={p.pp} "
                   f"({p.n_chips} GPUs) <- {routed}")
 
+    # Warm-started replanning: demand drifts, the session replans from
+    # its incumbent instead of re-solving cold.
+    ses = PlanSession()
+    ses.plan(instance=inst)
+    drifted = inst.with_lam(inst.lam * np.linspace(1.1, 0.9, inst.I))
+    res = ses.replan(instance=drifted)
+    print(f"\nreplan after demand drift: ${res.objective:.2f} in "
+          f"{res.wall_s*1e3:.0f} ms (warm-started="
+          f"{res.diagnostics.get('warm_started')}, "
+          f"{res.diagnostics.get('orderings_evaluated')} orderings)")
+
     # Two-stage robustness check (paper §5.2, small S for the demo).
-    sol = agh(inst)
-    res = evaluate(inst, sol, S=50, u_cap=np.full(6, 0.02))
+    res = plan("agh", instance=inst)
+    ev = evaluate(inst, res.solution, S=50, u_cap=np.full(6, 0.02))
     print(f"\nAGH under 50 perturbed scenarios: expected cost "
-          f"${res.expected_cost:.1f}, SLO violations "
-          f"{res.violation_rate:.1%}")
+          f"${ev.expected_cost:.1f}, SLO violations "
+          f"{ev.violation_rate:.1%}")
 
 
 if __name__ == "__main__":

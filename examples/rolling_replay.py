@@ -1,8 +1,9 @@
 """Rolling-horizon replay on the synthetic Azure-style diurnal trace
-(paper §5.3, Table 5 / Fig. 6 at demo scale).
+(paper §5.3, Table 5 / Fig. 6 at demo scale), on the unified planner API.
 
-Compares AGH-static vs AGH-5min (keep-best re-optimization) over a day of
-5-minute windows, printing the per-window cost profile.
+Compares AGH-static vs AGH-5min, where the 5-minute variant replans
+through a `PlanSession` — every window after the first warm-starts from
+the session incumbent instead of running a cold multi-start.
 
     PYTHONPATH=src python examples/rolling_replay.py [--windows 96]
 """
@@ -10,9 +11,9 @@ import argparse
 
 import numpy as np
 
-from repro.core import agh, default_instance
+from repro import PlanOptions, PlanSession, scenario
 from repro.core.rolling import rolling
-from repro.core.trace import diurnal_multipliers, peak_to_trough
+from repro.core.trace import peak_to_trough
 
 
 def main() -> None:
@@ -21,20 +22,25 @@ def main() -> None:
     ap.add_argument("--day", default="busy", choices=["busy", "volatile"])
     args = ap.parse_args()
 
-    inst = default_instance()
-    mult = diurnal_multipliers(args.day, seed=7, n_windows=args.windows)
-    path = np.outer(mult, inst.lam)
+    spec = scenario("azure-diurnal" if args.day == "busy" else "bursty",
+                    n_windows=args.windows)
+    inst = spec.build()
+    path = spec.demand_path(inst)
     print(f"trace: {args.windows} windows, "
-          f"peak/trough = {peak_to_trough(mult):.1f}x")
+          f"peak/trough = {peak_to_trough(path[:, 0] / inst.lam[0]):.1f}x")
 
-    planner_fast = lambda i: agh(i, R=1, patience=2)
-    r_static = rolling(inst, path, planner_fast, replan_every=None)
-    r_roll = rolling(inst, path, planner_fast, replan_every=4)
+    opts = PlanOptions(restarts=1, patience=2)
+    r_static = rolling(inst, path, PlanSession(options=opts),
+                       replan_every=None)
+    session = PlanSession(options=opts)
+    r_roll = rolling(inst, path, session, replan_every=4)
 
     print(f"\n{'':14s}{'mean/win':>10s}{'total':>12s}{'viol':>8s}{'replans':>9s}")
     for name, r in (("AGH-static", r_static), ("AGH-5min", r_roll)):
         print(f"{name:14s}{r.mean_window_cost:10.2f}{r.total_cost:12.1f}"
               f"{100*r.violation_rate:7.1f}%{r.replans:9d}")
+    print(f"session: {session.plans} plans, "
+          f"{session.warm_replans} warm replans")
 
     # coarse ASCII profile of per-window cost (static)
     c = r_static.per_window_cost

@@ -16,8 +16,9 @@ import time
 import jax
 import numpy as np
 
+from repro import plan
 from repro.configs import get_config
-from repro.core import agh, default_instance
+from repro.core import default_instance
 from repro.core.bridge import to_deployment
 from repro.models import decoder
 from repro.serving.engine import Engine, Request
@@ -37,9 +38,10 @@ def main() -> None:
 
     # --- 1. plan ---------------------------------------------------------
     inst = default_instance()
-    sol = agh(inst)
+    res = plan("agh", instance=inst)
+    sol = res.solution
     spec = to_deployment(inst, sol)
-    print(f"[plan] AGH in {sol.runtime_s:.2f}s -> "
+    print(f"[plan] AGH in {res.wall_s:.2f}s -> "
           f"{len(spec.pairs)} deployed pairs")
     for p in spec.pairs:
         print(f"  {p.model} @ {p.tier} TP={p.tp} PP={p.pp} "

@@ -1,0 +1,32 @@
+"""repro — Fast Heterogeneous Serving reproduction.
+
+The package root re-exports the planner API lazily (`plan`,
+`PlanRequest`, `PlanResult`, `register_solver`, ...): ``from repro import
+plan`` works without importing the jax-heavy kernel / model / serving
+subpackages, so the allocator stays usable in numpy/scipy-only
+environments (and imports in milliseconds).  Everything else lives in its
+subpackage: `repro.core` (allocator), `repro.planner` (facade),
+`repro.kernels`, `repro.models`, `repro.serving`, ...
+"""
+from __future__ import annotations
+
+# Lazily resolved from repro.planner (numpy/scipy only — no jax).
+_PLANNER_EXPORTS = (
+    "plan", "PlanOptions", "PlanRequest", "PlanResult", "PlanSession",
+    "SolverSpec", "UnknownSolverError", "register_solver", "solver_names",
+    "unregister_solver", "FleetSpec", "WorkloadSpec", "SLOSpec",
+    "ScenarioSpec", "scenario", "list_scenarios",
+)
+
+__all__ = list(_PLANNER_EXPORTS)
+
+
+def __getattr__(name: str):
+    if name in _PLANNER_EXPORTS:
+        from repro import planner
+        return getattr(planner, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_PLANNER_EXPORTS))

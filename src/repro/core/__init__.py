@@ -17,7 +17,8 @@ from .queueing import (queueing_delay, slo_attainment_with_queueing,
                        utilization, with_queueing_margin)
 from .rolling import RollingResult, replay_study, rolling, volatility_study
 from .solution import (Solution, cost_terms, feasibility, is_feasible,
-                       objective, proc_delay, provisioning_cost)
+                       objective, proc_delay, provisioning_cost,
+                       slack_report)
 from .stage2 import Stage2System, stage2_cost, stage2_lp
 
 __all__ = [
@@ -30,5 +31,5 @@ __all__ = [
     "solve_milp", "RollingResult", "replay_study",
     "rolling", "volatility_study", "Solution", "cost_terms", "feasibility",
     "is_feasible", "objective", "proc_delay", "provisioning_cost",
-    "Stage2System", "stage2_cost", "stage2_lp",
+    "slack_report", "Stage2System", "stage2_cost", "stage2_lp",
 ]

@@ -22,7 +22,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from .instance import Instance, KB_PER_GB
+from .instance import KB_PER_GB, Instance
 from .mechanisms import State
 from .solution import Solution, is_feasible, objective
 

@@ -43,13 +43,14 @@ import time
 
 import numpy as np
 
-from .gh import _phase1, greedy_heuristic
+from .gh import _phase1, _phase2, greedy_heuristic
 from .instance import Instance
 from .mechanisms import (DestCache, State, commit, deactivate_pair,
-                         delay_sel, max_commit, max_commit_batch,
-                         remove_assignment, score_moves_batch,
-                         solution_from_state, state_objective, state_restore,
-                         state_snapshot, undo_all)
+                         delay_sel, deployment_state, max_commit,
+                         max_commit_batch, remove_assignment,
+                         score_moves_batch, solution_from_state,
+                         state_objective, state_restore, state_snapshot,
+                         undo_all)
 from .solution import Solution, is_feasible, objective
 
 
@@ -273,7 +274,8 @@ def _invalidate_sources(clean: set, types, cells: set) -> None:
 def _relocate_batched(st: State, L: int, validate: bool,
                       cache: DestCache | None = None,
                       clean: set | None = None,
-                      fallback: bool = True) -> bool:
+                      fallback: bool = True,
+                      stats: dict | None = None) -> bool:
     """Relocate via `score_moves_batch`: per source cell, every destination
     is scored in one pass and the best strictly-improving move is applied.
     Scans the full (j',k') grid (the paper's scan), not the reference
@@ -322,6 +324,8 @@ def _relocate_batched(st: State, L: int, validate: bool,
                 commit(st, i, j2, k2, int(ms.c_dest[j2, k2]), ms.frac)
                 obj = state_objective(st)
                 improved = True
+                if stats is not None:
+                    stats["moves_applied"] = stats.get("moves_applied", 0) + 1
                 if cache is not None:
                     cache.invalidate_type(i)
                 if track and clean:
@@ -342,6 +346,8 @@ def _relocate_batched(st: State, L: int, validate: bool,
                 break
         elif skipped and fallback:
             clean.clear()       # fallback full rescan before convergence
+            if stats is not None:
+                stats["rescans"] = stats.get("rescans", 0) + 1
         else:
             break
     return any_improved
@@ -473,7 +479,8 @@ def _try_drain_batched(st: State, j: int, k: int,
 
 def _consolidate_batched(st: State, validate: bool,
                          cache: DestCache | None = None,
-                         clean: set | None = None) -> bool:
+                         clean: set | None = None,
+                         stats: dict | None = None) -> bool:
     """Drain lightly loaded pairs, restarting the ascending-y scan after
     every success (unchanged protocol).  A successful drain invalidates
     the relocate engine's clean-source marks (and cached admission rows)
@@ -500,6 +507,9 @@ def _consolidate_batched(st: State, validate: bool,
                         cache.invalidate_type(t)
                 if clean is not None and clean:
                     _invalidate_sources(clean, res[0], res[1])
+                if stats is not None:
+                    stats["drains_applied"] = stats.get("drains_applied",
+                                                        0) + 1
                 improved = True
                 break
         if not improved:
@@ -508,7 +518,8 @@ def _consolidate_batched(st: State, validate: bool,
 
 
 def _improve_batched(st: State, L: int, validate: bool,
-                     incremental: bool = True) -> None:
+                     incremental: bool = True,
+                     stats: dict | None = None) -> None:
     """The batched improvement phase: relocate and consolidation iterate
     to a joint fixed point (a consolidation that drained something hands
     the disturbed sources back to relocate; one that drained nothing
@@ -526,8 +537,9 @@ def _improve_batched(st: State, L: int, validate: bool,
     cache = DestCache(st)
     clean: set | None = set() if incremental else None
     while True:
-        _relocate_batched(st, L, validate, cache, clean, fallback=False)
-        if _consolidate_batched(st, validate, cache, clean):
+        _relocate_batched(st, L, validate, cache, clean, fallback=False,
+                          stats=stats)
+        if _consolidate_batched(st, validate, cache, clean, stats=stats):
             continue
         if not (incremental and clean):
             return
@@ -536,10 +548,12 @@ def _improve_batched(st: State, L: int, validate: bool,
         # loop alive — and then the next fixed point is verified again, so
         # the state returned has survived a full rescan unimproved.
         clean.clear()
+        if stats is not None:
+            stats["rescans"] = stats.get("rescans", 0) + 1
         if not _relocate_batched(st, L, validate, cache, clean,
-                                 fallback=False):
+                                 fallback=False, stats=stats):
             return
-        _consolidate_batched(st, validate, cache, clean)
+        _consolidate_batched(st, validate, cache, clean, stats=stats)
 
 
 def _assert_state_consistent(st: State) -> None:
@@ -562,11 +576,34 @@ _PARALLEL_MIN_N = 24000     # auto fan-out only beyond (20,20,20)-class sizes
 
 def _run_ordering(inst: Instance, order: np.ndarray, p1_snap: tuple, L: int,
                   batched: bool, ranked: list[np.ndarray] | None,
-                  validate: bool, incremental: bool = True) -> State:
+                  validate: bool, incremental: bool = True,
+                  stats: dict | None = None) -> State:
     """Construction + improvement for one multi-start ordering."""
     _, st = greedy_heuristic(inst, order=order, phase1_snapshot=p1_snap)
     if batched:
-        _improve_batched(st, L, validate, incremental=incremental)
+        _improve_batched(st, L, validate, incremental=incremental,
+                         stats=stats)
+    else:
+        _relocate(st, L, ranked, validate)
+        _consolidate(st, validate)
+    return st
+
+
+def _warm_start_state(inst: Instance, incumbent: Solution, L: int,
+                      batched: bool, ranked: list[np.ndarray] | None,
+                      validate: bool, incremental: bool,
+                      stats: dict | None = None) -> State:
+    """The warm-start seed: re-route the NEW instance's demand over the
+    incumbent's deployment (one Phase-2 pass — Phase 1's coverage search
+    is what the incumbent already paid for), then run the configured
+    improvement engine to a fixed point.  Replaces a full multi-start
+    ordering at roughly one ordering's cost while typically starting at a
+    much better objective than any cold construction."""
+    st = deployment_state(inst, incumbent)
+    _phase2(st, np.argsort(-inst.lam))
+    if batched:
+        _improve_batched(st, L, validate, incremental=incremental,
+                         stats=stats)
     else:
         _relocate(st, L, ranked, validate)
         _consolidate(st, validate)
@@ -628,11 +665,11 @@ def _multi_start_parallel(inst: Instance, orders: list[np.ndarray],
     finally:
         _FANOUT.clear()
     results.sort(key=lambda r: r[0])
-    best, best_obj = None, np.inf
+    best, best_obj, best_idx = None, np.inf, -1
     for idx, obj, sol in results:
         if obj < best_obj - 1e-9:
-            best, best_obj = sol, obj
-    return best, best_obj
+            best, best_obj, best_idx = sol, obj, idx
+    return best, best_obj, best_idx
 
 
 def _auto_workers(inst: Instance, n_orders: int) -> int:
@@ -650,7 +687,10 @@ def _auto_workers(inst: Instance, n_orders: int) -> int:
 def agh(inst: Instance, R: int | None = None, L: int = 3, seed: int = 0,
         patience: int = 5, validate: bool = False,
         local_search: str = "batched",
-        workers: int | None = None) -> Solution:
+        workers: int | None = None,
+        warm_start: Solution | None = None,
+        priority_orders: list[np.ndarray] | None = None,
+        stats: dict | None = None) -> Solution:
     """Adaptive Greedy Heuristic.
 
     `local_search` picks the improvement engine: "batched" (default, the
@@ -666,6 +706,27 @@ def agh(inst: Instance, R: int | None = None, L: int = 3, seed: int = 0,
     forked processes when ``n > 1``; results are independent of ``n``), and
     ``None`` picks automatically — sequential below `_PARALLEL_MIN_N`,
     fan-out above it.
+
+    `warm_start` seeds the multi-start from an incumbent solution (the
+    `PlanSession.replan` path): the incumbent's deployment is re-routed
+    under this instance's demand and improved, and that result enters the
+    protocol as the starting best — the early-stop patience then counts
+    non-improving orderings against a strong bound from the first
+    ordering on.  ``R=0`` with a warm start is the fast-replan protocol:
+    only the 8 deterministic orderings remain as challengers.
+
+    `priority_orders` are extra Phase-2 orderings evaluated BEFORE the
+    standard multi-start list.  `PlanSession` passes the ordering that
+    produced the incumbent: the multi-start winner is empirically stable
+    under workload drift, so replaying it recovers the cold run's best
+    basin at one ordering's cost even when the warm seed's own basin has
+    degraded.
+
+    `stats`, when given, is filled in place with solver diagnostics
+    (orderings evaluated, local-search moves applied, drains, fallback
+    rescans, the winning ordering, warm-start provenance) — collected on
+    the sequential driver; the parallel fan-out reports ordering counts
+    and the winning ordering only.
     """
     t0 = time.perf_counter()
     rng = np.random.default_rng(seed)
@@ -674,6 +735,8 @@ def agh(inst: Instance, R: int | None = None, L: int = 3, seed: int = 0,
     if R is None:
         R = _adaptive_R(inst, batched=batched)
     orders = _orderings(inst, R, rng)
+    if priority_orders:
+        orders = [np.asarray(o) for o in priority_orders] + orders
     # Phase 1 is ordering-independent: run it once and share the snapshot
     # with every start (and every forked worker).
     st0 = State.fresh(inst)
@@ -682,24 +745,52 @@ def agh(inst: Instance, R: int | None = None, L: int = 3, seed: int = 0,
     ranked = None if batched else _rank_inactive_targets(inst)
     if workers is None:
         workers = _auto_workers(inst, len(orders)) if batched else 0
+    if stats is not None:
+        stats.update(restarts=R, warm_started=warm_start is not None,
+                     local_search=local_search)
+    best, best_obj, best_order = None, np.inf, None
+    if warm_start is not None:
+        st = _warm_start_state(inst, warm_start, L, batched, ranked,
+                               validate, incremental, stats=stats)
+        best, best_obj = solution_from_state(inst, st), state_objective(st)
+        if stats is not None:
+            stats["warm_objective"] = best_obj
     if workers:
-        best, best_obj = _multi_start_parallel(
+        par, par_obj, par_idx = _multi_start_parallel(
             inst, orders, p1_snap, L, batched, ranked, validate, workers,
             incremental=incremental)
+        # Same strict-improvement rule as the sequential reduction: the
+        # warm seed came first, so it wins ties.
+        if par_obj < best_obj - 1e-9:
+            best, best_obj = par, par_obj
+            best_order = orders[par_idx]
+        if stats is not None:
+            stats["orderings_evaluated"] = len(orders)
     else:
-        best, best_obj = None, np.inf
         stale = 0
+        evaluated = 0
         for order in orders:
             st = _run_ordering(inst, order, p1_snap, L, batched, ranked,
-                               validate, incremental=incremental)
+                               validate, incremental=incremental,
+                               stats=stats)
+            evaluated += 1
             obj = state_objective(st)
             if obj < best_obj - 1e-9:
                 best, best_obj = solution_from_state(inst, st), obj
+                best_order = order
                 stale = 0
             else:
                 stale += 1
                 if stale >= patience:
                     break
+        if stats is not None:
+            stats["orderings_evaluated"] = evaluated
+            stats["early_stopped"] = evaluated < len(orders)
+    if stats is not None:
+        # The ordering whose basin won (None when the warm seed held) —
+        # `PlanSession` replays it on the next replan.
+        stats["winning_order"] = (None if best_order is None
+                                  else [int(i) for i in best_order])
     assert best is not None
     # Final check: the delta-maintained state must stand up to the full
     # constraint system (cheap — once per AGH call, not per move).

@@ -22,7 +22,7 @@ import json
 
 import numpy as np
 
-from .instance import Instance, MU, NU
+from .instance import MU, NU, Instance
 from .solution import Solution
 
 # TPU tier catalog: (chip class, serving dtype). Hourly prices follow

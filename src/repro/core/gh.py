@@ -206,6 +206,13 @@ def greedy_heuristic(inst: Instance, order: np.ndarray | None = None,
     return sol, st
 
 
-def gh(inst: Instance, **kw) -> Solution:
-    sol, _ = greedy_heuristic(inst, **kw)
+def gh(inst: Instance, order: np.ndarray | None = None,
+       run_phase1: bool = True, ablation: frozenset = frozenset(),
+       phase1_snapshot: tuple | None = None) -> Solution:
+    """Solution-only wrapper of `greedy_heuristic` with the same explicit
+    signature — a typo'd option fails loudly here instead of vanishing
+    into a ``**kw`` pass-through."""
+    sol, _ = greedy_heuristic(inst, order=order, run_phase1=run_phase1,
+                              ablation=ablation,
+                              phase1_snapshot=phase1_snapshot)
     return sol

@@ -29,7 +29,7 @@ import dataclasses
 
 import numpy as np
 
-from .instance import Instance, KB_PER_GB
+from .instance import KB_PER_GB, Instance
 
 
 @dataclasses.dataclass
@@ -1004,3 +1004,29 @@ def solution_from_state(inst: Instance, st: State):
     jj, kk = np.nonzero((st.q > 0.5) & (st.cfg >= 0))
     sol.w[jj, kk, st.cfg[jj, kk]] = 1.0
     return sol
+
+
+def deployment_state(inst: Instance, sol, ablation: frozenset = frozenset()
+                     ) -> State:
+    """A fresh `State` seeded with an existing solution's DEPLOYMENT —
+    active pairs, their configs, and their GPU counts — with all routing
+    cleared (x = 0, every type fully unserved, z = 0).
+
+    This is the warm-start entry point of AGH's replanning path: the
+    incumbent's Stage-1 structure is kept, rentals are charged into
+    `spend` (so the (8c) budget cap sees them), and GH Phase 2 then
+    re-routes the *new* demand over that structure — activating extra
+    pairs only where the incumbent's capacity cannot absorb the drift.
+    The seeded state trivially satisfies every State invariant (all
+    running aggregates are zero except `spend`), so commit/undo and the
+    local-search engines operate on it unchanged.
+    """
+    st = State.fresh(inst, ablation=ablation)
+    active = sol.q > 0.5
+    has_cfg = sol.w.max(axis=2) > 0.5
+    keep = active & has_cfg
+    st.q[:] = np.where(keep, 1.0, 0.0)
+    st.cfg[:] = np.where(keep, sol.w.argmax(axis=2), -1)
+    st.y[:] = np.where(keep, sol.y, 0.0)
+    st.spend = float(inst.Delta_T * np.sum(inst.p_c[None, :] * st.y))
+    return st

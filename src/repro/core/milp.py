@@ -21,7 +21,7 @@ import numpy as np
 from scipy import sparse
 from scipy.optimize import Bounds, LinearConstraint, milp
 
-from .instance import Instance, KB_PER_GB
+from .instance import KB_PER_GB, Instance
 from .solution import Solution
 
 

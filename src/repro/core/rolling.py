@@ -63,6 +63,17 @@ def _ewma_forecasts(lam_path: np.ndarray, alpha: float) -> np.ndarray:
     return fc
 
 
+def _as_planner(planner) -> Callable[[Instance], Solution]:
+    """Normalize the planner argument: a bare ``Instance -> Solution``
+    callable passes through; a `repro.planner.PlanSession`-like object
+    (anything with a ``replan`` method returning a result with a
+    ``.solution``) is adapted so every window after the first becomes a
+    warm-started replan seeded from the session's incumbent."""
+    if hasattr(planner, "replan"):
+        return lambda inst: planner.replan(instance=inst).solution
+    return planner
+
+
 def rolling(inst0: Instance, lam_path: np.ndarray,
             planner: Callable[[Instance], Solution],
             replan_every: int | None = None,
@@ -73,12 +84,17 @@ def rolling(inst0: Instance, lam_path: np.ndarray,
     """Replay `lam_path` ([T, I] arrivals).  If `replan_every` is None the
     Stage-1 plan is held fixed (static); otherwise the planner re-runs
     every `replan_every` windows on an EWMA forecast with keep-best.
+    `planner` is either a bare ``Instance -> Solution`` callable or a
+    `PlanSession` (see `_as_planner`) — with a session, every re-solve
+    warm-starts from the session incumbent instead of running cold.
     static_forecast: 'first' plans on the first window's demand (synthetic
     GRW study — the walk starts at the forecast); 'mean' plans on the
     day-average (the paper's protocol for the diurnal trace replay).
     window_h: hours per window; defaults to 24/T (a one-day path).  Pass it
     explicitly for multi-day replays, where T spans more than 24 h.
     """
+    session = planner if hasattr(planner, "replan") else None
+    planner = _as_planner(planner)
     lam_path = np.asarray(lam_path, float)
     T = lam_path.shape[0]
     if window_h is None:
@@ -106,6 +122,12 @@ def rolling(inst0: Instance, lam_path: np.ndarray,
                     segments.append((t0, t, deploy))
                     deploy, t0 = cand, t
                     replans += 1
+                elif session is not None:
+                    # Keep-best rejected the candidate: re-anchor the
+                    # session's incumbent to the plan actually deployed,
+                    # so later warm replans seed from the best-known plan
+                    # rather than from the rejected candidate.
+                    session.incumbent = deploy
         segments.append((t0, T, deploy))
     else:
         segments = [(0, T, deploy)]

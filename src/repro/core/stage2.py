@@ -38,7 +38,7 @@ import numpy as np
 from scipy import sparse
 from scipy.optimize import Bounds, LinearConstraint, milp
 
-from .instance import Instance, KB_PER_GB, T_CONV, ScenarioBatch
+from .instance import KB_PER_GB, T_CONV, Instance, ScenarioBatch
 from .solution import Solution, cost_terms
 
 

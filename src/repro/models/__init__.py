@@ -1,2 +1,2 @@
-from .config import ModelConfig
 from . import decoder
+from .config import ModelConfig

@@ -1,0 +1,20 @@
+# The unified planner API (ISSUE 5): one facade over every allocation
+# solver, declarative scenario specs, and warm-started replanning
+# sessions.  `plan()`/`PlanRequest`/`PlanResult` are the primary surface;
+# the legacy per-solver entry points in `repro.core` remain as thin,
+# bit-identical shims.
+from .api import PlanOptions, PlanRequest, PlanResult, plan
+from .registry import (SolverSpec, UnknownSolverError, get_solver,
+                       register_solver, solver_names, unregister_solver)
+from .session import PlanSession
+from .specs import (SCENARIOS, FleetSpec, ScenarioSpec, SLOSpec,
+                    WorkloadSpec, list_scenarios, scenario)
+
+__all__ = [
+    "PlanOptions", "PlanRequest", "PlanResult", "plan",
+    "SolverSpec", "UnknownSolverError", "get_solver", "register_solver",
+    "solver_names", "unregister_solver",
+    "PlanSession",
+    "SCENARIOS", "FleetSpec", "ScenarioSpec", "SLOSpec", "WorkloadSpec",
+    "list_scenarios", "scenario",
+]

@@ -1,0 +1,138 @@
+"""`PlanSession` — warm-started replanning over a drifting workload.
+
+A session holds the latest incumbent plan.  `replan()` solves the drifted
+problem by seeding AGH's multi-start from that incumbent: the incumbent's
+deployment (q, cfg, y) is re-routed under the new demand by one GH
+Phase-2 pass, polished by the incremental local search, and installed as
+the multi-start's starting best — so the early-stop patience counts from
+a strong bound immediately and the solve finishes after a handful of
+orderings instead of a cold multi-start.  SageServe's observation
+operationalized: at fleet scale, forecast-aware *replanning* beats cold
+re-solves because consecutive windows share most of their structure.
+
+The replan protocol trades the cold run's ordering coverage for wall
+clock (patience drops from 5 to `replan_patience`, random restarts are
+skipped); on drifted workloads the warm seed's head start more than
+covers the difference — `benchmarks/allocator_scaling.py` demonstrates
+objective <= cold AGH at measurably lower wall time on the (100,80,40)
+fleet, and tests/test_perf_smoke.py guards it.
+
+`core.rolling.rolling()` accepts a session wherever it took a bare
+planner callable, which turns every rolling-horizon window after the
+first into a warm-started solve.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.instance import Instance
+from repro.core.solution import Solution
+
+from .api import PlanOptions, PlanRequest, PlanResult, plan
+from .registry import get_solver
+from .specs import ScenarioSpec
+
+
+@dataclasses.dataclass
+class PlanSession:
+    """Stateful planning handle: cold-solve once, warm-replan thereafter.
+
+    ``replan_patience`` / ``replan_restarts`` shape the warm protocol
+    (early-stop patience and random-restart budget of replans); the cold
+    first solve always uses the full `options` as given.  Solvers that
+    cannot warm-start (everything but AGH today) fall back to cold solves
+    on every call — the session is still useful as a uniform driver.
+    """
+    solver: str = "agh"
+    options: PlanOptions = dataclasses.field(default_factory=PlanOptions)
+    replan_patience: int = 2
+    replan_restarts: int = 0
+    incumbent: Solution | None = None
+    last_result: PlanResult | None = None
+    last_instance: Instance | None = None
+    winning_order: tuple[int, ...] | None = None
+    plans: int = 0
+    warm_replans: int = 0
+
+    def plan(self, instance: Instance | None = None,
+             scenario: ScenarioSpec | str | None = None) -> PlanResult:
+        """Cold solve; installs the result as the session incumbent."""
+        inst = self._resolve(instance, scenario)
+        res = plan(PlanRequest(solver=self.solver, instance=inst,
+                               options=self.options))
+        self._install(inst, res)
+        return res
+
+    def replan(self, instance: Instance | None = None,
+               scenario: ScenarioSpec | str | None = None,
+               lam: np.ndarray | None = None) -> PlanResult:
+        """Warm-started solve for a drifted problem.
+
+        ``lam=`` is shorthand for "same instance, new demand vector"; it
+        requires a prior solve (the session remembers the instance).
+        Without an incumbent this degrades to a cold `plan()`.
+        """
+        if lam is not None:
+            if instance is not None or scenario is not None:
+                raise ValueError("pass lam= alone, or instance=/scenario=")
+            if self.last_instance is None:
+                raise ValueError("lam= replan needs a prior plan()/replan() "
+                                 "on a full instance")
+            instance = self.last_instance.with_lam(np.asarray(lam, float))
+        inst = self._resolve(instance, scenario)
+        if (self.incumbent is None
+                or self.incumbent.x.shape != (inst.I, inst.J, inst.K)):
+            # No incumbent, or one from a differently-shaped problem
+            # (population changed): nothing to warm-start from.
+            return self.plan(instance=inst)
+        warm = get_solver(self.solver).supports_warm_start
+        opts = self.options
+        if warm:
+            # Fast-replan protocol: tighter patience, no random restarts,
+            # and the incumbent's winning ordering replayed first (the
+            # multi-start winner is empirically stable under drift — see
+            # core/agh.py `priority_orders`).  The sequential driver is
+            # pinned unless the caller set workers explicitly: AGH's
+            # auto fan-out evaluates EVERY ordering with no early stop,
+            # which would silently discard the patience the warm seed
+            # buys — exactly at the fleet scales where auto engages.
+            opts = dataclasses.replace(
+                opts, patience=self.replan_patience,
+                restarts=self.replan_restarts, order=self.winning_order,
+                workers=0 if opts.workers is None else opts.workers)
+        res = plan(PlanRequest(solver=self.solver, instance=inst,
+                               options=opts, warm_start=self.incumbent))
+        self._install(inst, res, warm=warm)
+        return res
+
+    def seed(self, instance: Instance, result: PlanResult) -> None:
+        """Install an externally computed `PlanResult` as the incumbent
+        (e.g. one loaded from a JSON dump, or a solve a benchmark already
+        paid for) without re-solving."""
+        self._install(instance, result)
+
+    # Back-compat with the bare-callable planner protocol: a session IS a
+    # planner (rolling() and the benchmarks accept either the same way).
+    def __call__(self, inst: Instance) -> Solution:
+        return self.replan(instance=inst).solution
+
+    @staticmethod
+    def _resolve(instance: Instance | None,
+                 scenario: ScenarioSpec | str | None) -> Instance:
+        return PlanRequest(instance=instance,
+                           scenario=scenario).resolve_instance()
+
+    def _install(self, inst: Instance, res: PlanResult,
+                 warm: bool = False) -> None:
+        self.incumbent = res.solution
+        self.last_result = res
+        self.last_instance = inst
+        self.plans += 1
+        self.warm_replans += int(warm)
+        win = res.diagnostics.get("winning_order")
+        if win is not None:
+            # Keep the previous remembered ordering when the warm seed
+            # itself won — it is still the last known-good construction.
+            self.winning_order = tuple(int(i) for i in win)
