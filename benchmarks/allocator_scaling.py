@@ -1,10 +1,11 @@
 """Allocator scaling: registry-keyed rows for every engine generation.
 
-Each row is one instance size; solver columns are sub-dicts keyed by the
-planner-registry name (plus a ``+variant`` suffix for non-default engine
-modes), produced directly from `PlanResult.summary()` — the CI
-regression gate (`benchmarks/check_regression.py`) flattens and diffs
-them against the committed baseline:
+Each row is one (instance size, engine) pair; solver columns are
+sub-dicts keyed by the planner-registry name (plus a ``+variant`` suffix
+for non-default engine modes), produced directly from
+`PlanResult.summary()` — the CI regression gate
+(`benchmarks/check_regression.py`) flattens and diffs them against the
+committed baseline:
 
 * ``gh``             — vectorized GH through the facade;
 * ``agh``            — the incremental engine (default);
@@ -13,11 +14,21 @@ them against the committed baseline:
 * ``agh+warm``       — `PlanSession.replan` on a ±15% drifted demand
   vector, seeded from the undrifted incumbent, next to the cold AGH
   solve of the same drifted instance (``cold_*`` fields + ``speedup``);
+* ``agh+workersN``   — `--workers-sweep`: the multi-start process-pool
+  fan-out at widths 1/2/4/8 (numpy engine only);
+* ``agh+xla``        — `--engine xla`: the jitted lane-batched tier.
+  Every xla cell is solved twice: the first run pays jit tracing and is
+  reported as ``compile_s`` (first minus second wall), the second run's
+  steady-state timing is what the row and the regression gate see;
+* ``agh+xla+bwN``    — `--bw-curve`: the orderings-batch-width scaling
+  curve (device lanes per call capped at N = 1/2/4/8);
 * flat ``GH_before_us`` / ``AGH_before_us`` — the frozen scalar seed
   path, kept at sizes where it finishes in seconds.
 
-Emits one ``name,us_per_call`` line per cell so perf regressions show up
-directly in CI logs.
+``--trajectory-out PATH`` appends this run's rows to the append-only
+repo-root ``BENCH_allocator.json`` artifact (see
+`benchmarks/trajectory.py`).  Emits one ``name,us_per_call`` line per
+cell so perf regressions show up directly in CI logs.
 """
 from __future__ import annotations
 
@@ -40,27 +51,59 @@ SCALAR_AGH_MAX = 10 * 10 * 10   # scalar AGH above this takes minutes
 SCALAR_GH_MAX = 30 * 30 * 20    # scalar GH above this takes tens of seconds
 REF_AGH_MAX = 100 * 80 * 40     # reference-mode AGH above this: minutes
 DRIFT_PM = 0.15                 # warm-replan demo: ±15% per-type demand
+WORKER_WIDTHS = (1, 2, 4, 8)    # --workers-sweep fan-out widths
+BW_WIDTHS = (1, 2, 4, 8)        # --bw-curve xla lane-batch widths
 
 
 def _cell(row: dict, size: str, key: str, inst,
           options=None) -> PlanResult:
-    """One facade solve -> registry-keyed summary + CSV line."""
+    """One facade solve -> registry-keyed summary + CSV line.
+
+    xla cells are solved twice: run 1 includes jit tracing (reported as
+    ``compile_s``), run 2 is the steady-state row the gate diffs."""
     solver = key.split("+")[0]
-    res = plan(solver, instance=inst, options=options or PlanOptions())
-    row[key] = res.summary()
+    opts = options or PlanOptions()
+    res = plan(solver, instance=inst, options=opts)
+    cell = res.summary()
+    if opts.engine == "xla":
+        warm = plan(solver, instance=inst, options=opts)
+        cell = warm.summary()
+        cell["compile_s"] = round(max(0.0, res.wall_s - warm.wall_s), 4)
+        res = warm
+    row[key] = cell
     emit(f"allocator_scaling.{size}.{key}", res.wall_s * 1e6,
          f"obj={res.objective:.2f}")
     return res
 
 
+def _run_xla_row(row: dict, size: str, inst, bw_curve: bool) -> None:
+    res = _cell(row, size, "agh+xla", inst, PlanOptions(engine="xla"))
+    emit(f"allocator_scaling.{size}.agh+xla.compile",
+         row["agh+xla"]["compile_s"] * 1e6,
+         f"steady_s={res.wall_s:.3f}")
+    if bw_curve:
+        for bw in BW_WIDTHS:
+            _cell(row, size, f"agh+xla+bw{bw}", inst,
+                  PlanOptions(engine="xla", batch_width=bw))
+
+
 def run(sizes=SIZES, scalar_agh_max: int = SCALAR_AGH_MAX,
         scalar_gh_max: int = SCALAR_GH_MAX,
-        ref_agh_max: int = REF_AGH_MAX, warm_demo: bool = True) -> list[dict]:
+        ref_agh_max: int = REF_AGH_MAX, warm_demo: bool = True,
+        engine: str = "numpy", workers_sweep: bool = False,
+        bw_curve: bool = False) -> list[dict]:
     rows = []
     for (I, J, K) in sizes:
         inst = random_instance(I, J, K, seed=42)
         size = f"({I},{J},{K})"
-        row: dict = dict(size=size)
+        row: dict = dict(size=size, engine=engine)
+
+        if engine == "xla":
+            # The xla tier rides its own rows (same sizes, engine-keyed
+            # so the gate never diffs them against numpy timings).
+            _run_xla_row(row, size, inst, bw_curve)
+            rows.append(row)
+            continue
 
         if I * J * K <= scalar_gh_max:
             with Timer() as t:
@@ -82,6 +125,13 @@ def run(sizes=SIZES, scalar_agh_max: int = SCALAR_AGH_MAX,
         _cell(row, size, "agh+rescan", inst,
               PlanOptions(local_search="batched-rescan"))
         agh_res = _cell(row, size, "agh", inst)
+
+        if workers_sweep:
+            # Multi-start fan-out scaling: all orderings, no early stop
+            # (the pool protocol), at fixed pool widths.
+            for w in WORKER_WIDTHS:
+                _cell(row, size, f"agh+workers{w}", inst,
+                      PlanOptions(workers=w))
 
         if warm_demo:
             # Warm-started replanning (ISSUE 5 acceptance): drift every
@@ -119,9 +169,26 @@ if __name__ == "__main__":
                     help="smallest + acceptance size only (CI smoke)")
     ap.add_argument("--xl", action="store_true",
                     help="include the beyond-paper sizes up to (200,160,80)")
+    ap.add_argument("--engine", default="numpy", choices=("numpy", "xla"),
+                    help="allocator engine for the agh rows (xla adds "
+                         "compile-vs-steady split; needs jax)")
+    ap.add_argument("--workers-sweep", action="store_true",
+                    help="add agh+workersN rows at widths 1/2/4/8")
+    ap.add_argument("--bw-curve", action="store_true",
+                    help="with --engine xla: add agh+xla+bwN rows "
+                         "(orderings-batch-width scaling curve)")
+    ap.add_argument("--trajectory-out", default=None, metavar="PATH",
+                    help="append this run's rows to the trajectory "
+                         "artifact (e.g. BENCH_allocator.json)")
     ap.add_argument("--scalar-agh-max", type=int, default=SCALAR_AGH_MAX,
                     help="largest I*J*K for which the scalar AGH is timed")
     args = ap.parse_args()
-    run(sizes=(QUICK_SIZES if args.quick else
-               (SIZES_XL if args.xl else SIZES)),
-        scalar_agh_max=args.scalar_agh_max)
+    out_rows = run(sizes=(QUICK_SIZES if args.quick else
+                          (SIZES_XL if args.xl else SIZES)),
+                   scalar_agh_max=args.scalar_agh_max,
+                   engine=args.engine, workers_sweep=args.workers_sweep,
+                   bw_curve=args.bw_curve)
+    if args.trajectory_out:
+        from .trajectory import append
+        append(args.trajectory_out, out_rows,
+               label=f"allocator_scaling --engine {args.engine}")

@@ -13,9 +13,13 @@ allocator regresses:
 * **runtimes get a generous factor** (``--runtime-factor``, default 5x):
   every ``*_s`` / ``*_us`` key may drift with machine speed but not blow
   past ``baseline * factor`` — catching order-of-magnitude engine
-  regressions without flaking on CI hardware variance.  Rows whose
-  baseline runtime is below ``--runtime-floor`` (10 ms) are skipped:
-  sub-jitter timings would gate on scheduler noise, not on the engine;
+  regressions without flaking on CI hardware variance.  Keys whose
+  baseline runtime is below ``--runtime-floor`` (10 ms) gate on an
+  absolute allowance instead: ``fresh <= max(baseline * factor,
+  --runtime-ceiling)`` (default 5 ms).  The old behavior skipped those
+  keys entirely, which let a 0.5 ms hot path regress to 9 ms unnoticed;
+  the ceiling keeps scheduler noise out of the gate while still bounding
+  fast-path blowups;
 * **stale baselines are rejected**: the baseline and every fresh dump
   must carry the current ``JSON_SCHEMA_VERSION`` (bumped whenever the row
   layout changes), so the gate never silently "passes" by comparing
@@ -73,8 +77,18 @@ def _flatten(row: dict) -> dict:
     return flat
 
 
+def _row_key(row: dict) -> tuple:
+    """Row identity within a section: (size, engine).  The engine field
+    entered the schema with the xla allocator tier (v4) — without it an
+    xla row and a numpy row of the same size would silently collide and
+    the gate would diff one engine's fresh timings against the other's
+    baseline."""
+    return (row.get("size"), row.get("engine", "numpy"))
+
+
 def check(baseline: dict, fresh_sections: dict, objective_rtol: float,
-          runtime_factor: float, runtime_floor_s: float = 0.01) -> list[str]:
+          runtime_factor: float, runtime_floor_s: float = 0.01,
+          runtime_ceiling_s: float = 0.005) -> list[str]:
     """Returns a list of human-readable failure strings (empty = pass)."""
     failures: list[str] = []
     for section, base_rows in baseline["sections"].items():
@@ -86,10 +100,10 @@ def check(baseline: dict, fresh_sections: dict, objective_rtol: float,
             failures.append(f"{section}: fresh run errored: "
                             f"{fresh_rows['error']}")
             continue
-        fresh_by_size = {r.get("size"): r for r in fresh_rows}
+        fresh_by_size = {_row_key(r): r for r in fresh_rows}
         for base_row in base_rows:
             size = base_row.get("size")
-            fresh = fresh_by_size.get(size)
+            fresh = fresh_by_size.get(_row_key(base_row))
             if fresh is None:
                 failures.append(f"{section} {size}: row missing")
                 continue
@@ -114,8 +128,19 @@ def check(baseline: dict, fresh_sections: dict, objective_rtol: float,
                             f"(rtol {objective_rtol})")
                 elif _is_runtime_key(key):
                     if _runtime_seconds(key, base_val) < runtime_floor_s:
-                        continue    # sub-jitter row: noise, not signal
-                    if val > base_val * runtime_factor:
+                        # Fast path: the factor alone would gate on
+                        # scheduler jitter, but skipping entirely lets a
+                        # sub-ms hot path blow up unnoticed — allow the
+                        # larger of factor and the absolute ceiling.
+                        scale = 1e6 if key.endswith("_us") else 1.0
+                        limit = max(base_val * runtime_factor,
+                                    runtime_ceiling_s * scale)
+                        if val > limit:
+                            failures.append(
+                                f"{section} {size} {key}: fast-path "
+                                f"runtime {val} > max({runtime_factor}x "
+                                f"baseline {base_val}, ceiling {limit})")
+                    elif val > base_val * runtime_factor:
                         failures.append(
                             f"{section} {size} {key}: runtime {val} > "
                             f"{runtime_factor}x baseline {base_val}")
@@ -130,8 +155,12 @@ def main(argv=None) -> int:
     ap.add_argument("--objective-rtol", type=float, default=1e-6)
     ap.add_argument("--runtime-factor", type=float, default=5.0)
     ap.add_argument("--runtime-floor", type=float, default=0.01,
-                    help="skip runtime checks on rows whose baseline is "
-                         "under this many seconds (scheduler noise)")
+                    help="below this baseline runtime (seconds) the "
+                         "factor check is replaced by the absolute "
+                         "ceiling check")
+    ap.add_argument("--runtime-ceiling", type=float, default=0.005,
+                    help="absolute runtime allowance (seconds) for keys "
+                         "whose baseline is under --runtime-floor")
     ap.add_argument("--write-baseline", action="store_true",
                     help="regenerate the baseline from the fresh dumps "
                          "instead of checking against it")
@@ -185,7 +214,8 @@ def main(argv=None) -> int:
     failures = check(baseline, fresh_sections,
                      objective_rtol=args.objective_rtol,
                      runtime_factor=args.runtime_factor,
-                     runtime_floor_s=args.runtime_floor)
+                     runtime_floor_s=args.runtime_floor,
+                     runtime_ceiling_s=args.runtime_ceiling)
     if failures:
         print(f"REGRESSION GATE: {len(failures)} failure(s)", flush=True)
         for f in failures:

@@ -10,7 +10,11 @@ import time
 # v3: solver columns are registry-keyed sub-dicts (`PlanResult.summary()`
 # rows keyed by the planner-registry solver name, e.g. "gh"/"agh"/
 # "agh+reference") instead of flat per-method key prefixes.
-JSON_SCHEMA_VERSION = 3
+# v4: rows carry an "engine" field ("numpy"/"xla") that is part of the
+# row identity — xla and numpy rows of the same size never collide —
+# and xla rows report jit compile time separately (`compile_s`) so the
+# runtime gate sees steady-state timings only.
+JSON_SCHEMA_VERSION = 4
 
 _made_dirs: set[str] = set()
 

@@ -1,0 +1,55 @@
+"""Benchmark trajectory artifact: an append-only JSON history of
+allocator benchmark rows across commits.
+
+`append(path, rows)` loads the artifact (a JSON list of entries), adds
+one entry stamped with the current git SHA, a UTC timestamp, and the dump
+schema version, and rewrites the file.  CI runs
+``allocator_scaling --quick --trajectory-out BENCH_allocator.json`` and
+uploads the repo-root file as a build artifact, so the allocator's
+objective/runtime trajectory is recoverable per commit without digging
+through job logs.  Entries with stale schema versions are kept verbatim
+(the file is a history, not a gate — `check_regression.py` is the gate).
+"""
+from __future__ import annotations
+
+import datetime
+import json
+import os
+
+from .common import JSON_SCHEMA_VERSION, ensure_outdir, git_sha
+
+DEFAULT_PATH = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "BENCH_allocator.json")
+
+
+def append(path: str, rows: list[dict], label: str | None = None) -> dict:
+    """Append one trajectory entry holding `rows`; returns the entry."""
+    history: list = []
+    if os.path.exists(path):
+        try:
+            with open(path) as fh:
+                loaded = json.load(fh)
+            if isinstance(loaded, list):
+                history = loaded
+        except (OSError, json.JSONDecodeError):
+            # A corrupt artifact must not fail the benchmark run — start
+            # a fresh history (the old file is overwritten below).
+            history = []
+    entry = {
+        "git_sha": git_sha(),
+        "timestamp": datetime.datetime.now(
+            datetime.timezone.utc).isoformat(timespec="seconds"),
+        "schema_version": JSON_SCHEMA_VERSION,
+        "rows": rows,
+    }
+    if label:
+        entry["label"] = label
+    history.append(entry)
+    ensure_outdir(path)
+    with open(path, "w") as fh:
+        json.dump(history, fh, indent=2)
+        fh.write("\n")
+    print(f"# trajectory: appended entry {len(history)} to {path} "
+          f"({len(rows)} rows)", flush=True)
+    return entry

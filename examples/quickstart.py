@@ -41,6 +41,22 @@ def main() -> None:
             print(f"  {p.model} on {p.tier}: TP={p.tp} PP={p.pp} "
                   f"({p.n_chips} GPUs) <- {routed}")
 
+    # The XLA engine: same AGH, multi-start as one batched lane axis on
+    # the accelerator, numpy path as the oracle (objective can only
+    # match or beat it).  jax is optional — fall back gracefully.
+    try:
+        from repro import EngineUnavailableError
+        res_x = plan("agh", instance=inst, engine="xla")
+        print(f"\nagh on engine='xla': ${res_x.objective:.2f} in "
+              f"{res_x.wall_s*1e3:.0f} ms "
+              f"({res_x.diagnostics.get('orderings_evaluated')} orderings "
+              f"batched, {res_x.diagnostics.get('device_calls_phase2')} "
+              f"phase-2 device calls)")
+    except EngineUnavailableError as exc:
+        # No jax in this environment: the numpy default is unaffected.
+        print(f"\nengine='xla' unavailable ({exc}); numpy engine remains "
+              "the default")
+
     # Warm-started replanning: demand drifts, the session replans from
     # its incumbent instead of re-solving cold.
     ses = PlanSession()

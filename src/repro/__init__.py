@@ -13,7 +13,8 @@ from __future__ import annotations
 # Lazily resolved from repro.planner (numpy/scipy only — no jax).
 _PLANNER_EXPORTS = (
     "plan", "PlanOptions", "PlanRequest", "PlanResult", "PlanSession",
-    "SolverSpec", "UnknownSolverError", "register_solver", "solver_names",
+    "SolverSpec", "UnknownSolverError", "EngineUnavailableError",
+    "register_solver", "solver_names",
     "unregister_solver", "FleetSpec", "WorkloadSpec", "SLOSpec",
     "ScenarioSpec", "scenario", "list_scenarios",
 )

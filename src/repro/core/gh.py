@@ -72,105 +72,130 @@ def _phase1(st: State) -> None:
         st.uncovered -= set(int(i) for i in np.flatnonzero(members[:, j, k]))
 
 
-def _phase2(st: State, order: np.ndarray) -> None:
+def _phase2_prep(st: State, i: int, active: np.ndarray, jj: np.ndarray,
+                 kk: np.ndarray) -> tuple[np.ndarray, np.ndarray | None]:
+    """Candidate configs and delays for one Phase-2 type: the M1 winners
+    with the active cells overwritten by each pair's own (possibly
+    M3-upgraded) config.  `active`/`jj`/`kk` are the caller-maintained
+    active-pair mask and its nonzero index lists.  Shared by `_phase2`
+    and the XLA engine's lockstep driver (which computes the M2 keys on
+    device from exactly these rows)."""
     inst = st.inst
-    K = inst.K
     no_m1 = "no_m1" in st.ablation
     no_m3 = "no_m3" in st.ablation
     if no_m1:
-        c_inact_const = np.full((inst.J, K), inst.cfg_min_nm, dtype=np.int64)
+        c_inact = np.full((inst.J, inst.K), inst.cfg_min_nm, dtype=np.int64)
+    else:
+        c_inact = inst.cfg_m1[i]
+    c_arr = np.where(active, st.cfg, c_inact)             # [J,K], -1 = none
+    # Active pairs whose current config breaks the type's delay SLO
+    # either get an M3 upgrade or (ablated) are routed to anyway.
+    if not no_m3 and jj.size:
+        # Gather the few active cells' delays directly — the full
+        # [J,K] take_along_axis grid is pure overhead here.
+        d_act = inst.D_cfg[i, jj, kk, c_arr[jj, kk]]
+        for a in np.flatnonzero(d_act > inst.Delta[i]):
+            j, k = int(jj[a]), int(kk[a])
+            c2 = m3_upgrade(st, i, j, k)                  # M3
+            c_arr[j, k] = -1 if c2 is None else c2
+    # Per-pair delay of the candidate configs: precomputed M1 delays
+    # with the active cells overwritten (post-upgrade values; dead
+    # cells are masked by `valid` downstream).
+    if no_m1:
+        d_sel = None
+    else:
+        d_sel = inst.m1_delay[i].copy()
+        if jj.size:
+            d_sel[jj, kk] = inst.D_cfg[i, jj, kk,
+                                       np.maximum(c_arr[jj, kk], 0)]
+    return c_arr, d_sel
+
+
+def _phase2_walk(st: State, i: int, c_arr: np.ndarray, kap0: np.ndarray,
+                 kap1: np.ndarray, active: np.ndarray, jj: np.ndarray,
+                 kk: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """The lazy (pi, kappa)-lexicographic commit scan of one Phase-2 type.
+
+    `kap0`/`kap1` are the flattened per-class key rows (+inf = invalid),
+    consumed destructively (visited masking).  All pi=0 (full-coverage)
+    cells are visited before any pi=1 cell, each class in ascending
+    kappa, and `argmin` returns the first minimum, which reproduces the
+    stable lexsort's j-major tie order exactly.  A visited cell is
+    masked to +inf and never revisited (the sorted walk's `p` only moved
+    forward), so the visit sequence is identical to a sorted walk.
+    Mutates `active` in place on fresh activations and returns the
+    updated (jj, kk) index lists."""
+    inst = st.inst
+    K = inst.K
+    caps = None
+    probes = 0
+    while st.r_rem[i] > 1e-9:
+        flat = int(np.argmin(kap0))
+        cur = kap0
+        if not np.isfinite(kap0[flat]):
+            flat = int(np.argmin(kap1))
+            cur = kap1
+            if not np.isfinite(kap1[flat]):
+                break
+        cur[flat] = np.inf      # visited: the walk never backtracks
+        j, k = flat // K, flat % K
+        c = int(c_arr[j, k])
+        # Re-validate under the *current* state (the pair may have
+        # been upgraded while serving an earlier candidate).
+        if (st.q[j, k] > 0.5 and c != st.cfg[j, k]
+                and inst.nm[c] <= st.y[j, k]):
+            c_use = int(st.cfg[j, k])
+            if inst.D_cfg[i, j, k, c_use] > inst.Delta[i]:
+                continue
+        else:
+            c_use = c
+        if c_use != c:      # rare post-upgrade path: row config stale
+            cap = max_commit(st, i, j, k, c_use)
+        elif caps is not None:
+            cap = float(caps[j, k])
+        elif probes < 6:
+            cap = max_commit(st, i, j, k, c)
+            probes += 1
+        else:               # long dead scan: batch the rest of the row
+            caps = max_commit_batch(st, i, c_arr)
+            # Wholesale-mask candidates the batch proves dead, except
+            # stale-config cells (they re-validate to the pair's own
+            # config above, so their row cap is not authoritative).
+            stale = (active & (c_arr != st.cfg)
+                     & (inst.nm[np.maximum(c_arr, 0)] <= st.y))
+            dead = ~(stale | (caps > 1e-9))
+            kap0[dead.ravel()] = np.inf
+            kap1[dead.ravel()] = np.inf
+            cap = float(caps[j, k])
+        frac = min(st.r_rem[i], cap)
+        if frac <= 1e-9:
+            continue
+        was_active = st.q[j, k] > 0.5
+        commit(st, i, j, k, c_use, frac)
+        if not was_active:
+            active[j, k] = True
+            jj, kk = np.nonzero(active)
+        caps = None         # state changed: cached row caps invalid
+        probes = 0
+    return jj, kk
+
+
+def _phase2(st: State, order: np.ndarray) -> None:
+    inst = st.inst
     # The active set changes only when a commit activates a fresh pair —
     # track that instead of recomputing the mask per type.
     active = st.q > 0.5
     jj, kk = np.nonzero(active)                           # j-major order
     for i in order:
         i = int(i)
-        c_inact = c_inact_const if no_m1 else inst.cfg_m1[i]
-        c_arr = np.where(active, st.cfg, c_inact)         # [J,K], -1 = none
-        # Active pairs whose current config breaks the type's delay SLO
-        # either get an M3 upgrade or (ablated) are routed to anyway.
-        if not no_m3 and jj.size:
-            # Gather the few active cells' delays directly — the full
-            # [J,K] take_along_axis grid is pure overhead here.
-            d_act = inst.D_cfg[i, jj, kk, c_arr[jj, kk]]
-            for a in np.flatnonzero(d_act > inst.Delta[i]):
-                j, k = int(jj[a]), int(kk[a])
-                c2 = m3_upgrade(st, i, j, k)              # M3
-                c_arr[j, k] = -1 if c2 is None else c2
-        # Per-pair delay of the candidate configs: precomputed M1 delays
-        # with the active cells overwritten (post-upgrade values; dead
-        # cells are masked by `valid` downstream).
-        if no_m1:
-            d_sel = None
-        else:
-            d_sel = inst.m1_delay[i].copy()
-            if jj.size:
-                d_sel[jj, kk] = inst.D_cfg[i, jj, kk,
-                                           np.maximum(c_arr[jj, kk], 0)]
+        c_arr, d_sel = _phase2_prep(st, i, active, jj, kk)
         pi, kappa, valid = rank_keys_all(st, i, c_arr, d_sel=d_sel)  # M2
         if not valid.any():
             continue
-        # Lazy (pi, kappa)-lexicographic scan.  The previous engine
-        # lexsorted every valid candidate up front, but the scan almost
-        # always commits on the first one and stops — so candidates are
-        # now *selected* on demand: all pi=0 (full-coverage) cells are
-        # visited before any pi=1 cell, each class in ascending kappa,
-        # and `argmin` returns the first minimum, which reproduces the
-        # stable lexsort's j-major tie order exactly.  A visited cell is
-        # masked to +inf and never revisited (the sorted walk's `p` only
-        # moved forward), so the visit sequence is identical.
+        # Lazy candidate selection: see `_phase2_walk`.
         kap0 = np.where(valid & (pi == 0), kappa, np.inf).ravel()
         kap1 = np.where(valid & (pi == 1), kappa, np.inf).ravel()
-        caps = None
-        probes = 0
-        while st.r_rem[i] > 1e-9:
-            flat = int(np.argmin(kap0))
-            cur = kap0
-            if not np.isfinite(kap0[flat]):
-                flat = int(np.argmin(kap1))
-                cur = kap1
-                if not np.isfinite(kap1[flat]):
-                    break
-            cur[flat] = np.inf      # visited: the walk never backtracks
-            j, k = flat // K, flat % K
-            c = int(c_arr[j, k])
-            # Re-validate under the *current* state (the pair may have
-            # been upgraded while serving an earlier candidate).
-            if (st.q[j, k] > 0.5 and c != st.cfg[j, k]
-                    and inst.nm[c] <= st.y[j, k]):
-                c_use = int(st.cfg[j, k])
-                if inst.D_cfg[i, j, k, c_use] > inst.Delta[i]:
-                    continue
-            else:
-                c_use = c
-            if c_use != c:      # rare post-upgrade path: row config stale
-                cap = max_commit(st, i, j, k, c_use)
-            elif caps is not None:
-                cap = float(caps[j, k])
-            elif probes < 6:
-                cap = max_commit(st, i, j, k, c)
-                probes += 1
-            else:               # long dead scan: batch the rest of the row
-                caps = max_commit_batch(st, i, c_arr)
-                # Wholesale-mask candidates the batch proves dead, except
-                # stale-config cells (they re-validate to the pair's own
-                # config above, so their row cap is not authoritative).
-                stale = (active & (c_arr != st.cfg)
-                         & (inst.nm[np.maximum(c_arr, 0)] <= st.y))
-                dead = ~(stale | (caps > 1e-9))
-                kap0[dead.ravel()] = np.inf
-                kap1[dead.ravel()] = np.inf
-                cap = float(caps[j, k])
-            frac = min(st.r_rem[i], cap)
-            if frac <= 1e-9:
-                continue
-            was_active = st.q[j, k] > 0.5
-            commit(st, i, j, k, c_use, frac)
-            if not was_active:
-                active[j, k] = True
-                jj, kk = np.nonzero(active)
-            caps = None         # state changed: cached row caps invalid
-            probes = 0
+        jj, kk = _phase2_walk(st, i, c_arr, kap0, kap1, active, jj, kk)
 
 
 def greedy_heuristic(inst: Instance, order: np.ndarray | None = None,

@@ -232,6 +232,11 @@ class Instance:
         # i (0 GPUs where infeasible) — the inactive-destination branch of
         # the relocate delta objective, hoisted to a per-instance tensor.
         self.m1_rental = self.p_c[None, None, :] * self.m1_nm       # [I,J,K]
+        # Device-resident tensor bundle for the XLA engine, built lazily
+        # on first `engine="xla"` solve (see core/xla/tensors.py).  The
+        # perturbed()/stressed()/with_lam() helpers construct fresh
+        # Instance objects, so a cached bundle can never go stale.
+        self._xla_tensors = None
 
     # --- sizes ---------------------------------------------------------
     @property

@@ -537,6 +537,60 @@ class DestCache:
 
 
 @dataclasses.dataclass
+class RemovalTerms:
+    """Closed-form scalars of detaching ALL of x[i,j,k] from its pair.
+
+    Mirrors `remove_assignment` (+ `deactivate_pair` when the source is
+    the pair's last traffic) term by term, in the same float op order, so
+    `over` equals a real remove → score → undo round trip bitwise on
+    every non-source cell.  Shared by `score_moves_batch`'s pure scan
+    path and the XLA engine's batched relocate screen — the two consumers
+    must agree on these scalars exactly, which is why they are computed
+    in one place."""
+    frac: float           # removed fraction (= x[i,j,k])
+    data: float           # data_gb[i] * frac
+    d_src: float          # per-unit delay at the source pair's config
+    gain: float           # objective decrease of the bare removal
+    deact: bool           # removal empties the pair (deactivation refund)
+    over: tuple           # (r_rem, E_used, D_used, stor_used, spend) after
+
+
+def removal_terms(st: State, i: int, j: int, k: int) -> RemovalTerms:
+    """Source-removal scalars for relocating all of x[i,j,k]; see
+    `RemovalTerms`.  Pure — the state is never touched."""
+    inst = st.inst
+    frac = float(st.x[i, j, k])
+    c_src = int(st.cfg[j, k])
+    had_z = bool(st.z[i, j, k] > 0.5)
+    data = inst.data_gb[i] * frac
+    weight = inst.B[j] if had_z else 0.0
+    d_src = inst.D_cfg[i, j, k, c_src]
+    gain = (inst.Delta_T * inst.p_s * (data + weight)
+            + inst.rho[i] * d_src * 1e3 * frac)
+    deact = float(st.x[:, j, k].sum()) - frac <= 1e-12
+    n_oth = 0
+    if deact:
+        n_oth = int(np.count_nonzero(st.z[:, j, k] > 0.5))
+        if had_z:
+            n_oth -= 1
+        gain += inst.Delta_T * (inst.p_s * inst.B[j] * n_oth
+                                + inst.p_c[k] * float(st.y[j, k]))
+    # Source-removed scalars, in `remove_assignment`'s own op order,
+    # so the caps equal a real remove -> score -> undo round trip.
+    rr2 = float(st.r_rem[i]) + frac
+    e2 = st.E_used[i] - inst.e_bar[i, j, k] * frac
+    d2 = st.D_used[i] - d_src * frac
+    stor2 = st.stor_used[i] - (data + weight)
+    sp2 = st.spend - inst.Delta_T * inst.p_s * (data + weight)
+    if deact:
+        if n_oth:
+            sp2 -= inst.Delta_T * inst.p_s * inst.B[j] * n_oth
+        sp2 -= inst.Delta_T * inst.p_c[k] * float(st.y[j, k])
+    return RemovalTerms(frac=frac, data=data, d_src=d_src, gain=gain,
+                        deact=deact, over=(rr2, e2, d2, stor2, sp2))
+
+
+@dataclasses.dataclass
 class MoveScores:
     """Scored relocate destinations for one (i, j, k) source cell.
 
@@ -599,9 +653,6 @@ def score_moves_batch(st: State, i: int, j: int, k: int,
     inst = st.inst
     if cache is not None and improve_below is not None:
         c_dest, d_sel, ok_c, rental, dcost = cache.rows(st, i)
-        frac = float(st.x[i, j, k])
-        c_src = int(st.cfg[j, k])
-        had_z = bool(st.z[i, j, k] > 0.5)
         # Removal gain in closed form: refunded data storage, weight
         # storage on first-admission drop, routed delay — plus the rental
         # and stranded-admission refunds of `deactivate_pair` when the
@@ -609,25 +660,15 @@ def score_moves_batch(st: State, i: int, j: int, k: int,
         # increase (phi * frac exactly, since r_rem >= 0 invariantly)
         # cancels against the destination's `d_unmet` term, so obj_after
         # reduces to obj_cur - gain + the destination delta.
-        data = inst.data_gb[i] * frac
-        weight = inst.B[j] if had_z else 0.0
-        d_src = inst.D_cfg[i, j, k, c_src]
-        gain = (inst.Delta_T * inst.p_s * (data + weight)
-                + inst.rho[i] * d_src * 1e3 * frac)
-        deact = float(st.x[:, j, k].sum()) - frac <= 1e-12
-        if deact:
-            n_oth = int(np.count_nonzero(st.z[:, j, k] > 0.5))
-            if had_z:
-                n_oth -= 1
-            gain += inst.Delta_T * (inst.p_s * inst.B[j] * n_oth
-                                    + inst.p_c[k] * float(st.y[j, k]))
+        rt = removal_terms(st, i, j, k)
+        frac, gain = rt.frac, rt.gain
         if obj_cur is None:
             obj_cur = state_objective(st)
         obj0 = obj_cur - gain + inst.Delta_T * inst.phi[i] * frac
         # Improvement filter in two array ops: the frac-scaled delay term
         # plus the cached static destination cost against a folded bound.
         dyn = float(inst.rho[i]) * 1e3 * frac
-        base = obj_cur - gain + inst.Delta_T * (inst.p_s * data)
+        base = obj_cur - gain + inst.Delta_T * (inst.p_s * rt.data)
         delta = dcost + dyn * d_sel
         ok = ok_c & (delta < improve_below - base)
         ok[j, k] = False
@@ -636,18 +677,8 @@ def score_moves_batch(st: State, i: int, j: int, k: int,
             return MoveScores(i=i, j=j, k=k, frac=frac, c_dest=c_dest,
                               caps=cache.caps0, admissible=cache.adm0,
                               obj_after=cache.inf0, obj_removed=obj0)
-        # Source-removed scalars, in `remove_assignment`'s own op order,
-        # so the caps equal a real remove -> score -> undo round trip.
-        rr2 = float(st.r_rem[i]) + frac
-        e2 = st.E_used[i] - inst.e_bar[i, j, k] * frac
-        d2 = st.D_used[i] - d_src * frac
-        stor2 = st.stor_used[i] - (data + weight)
-        sp2 = st.spend - inst.Delta_T * inst.p_s * (data + weight)
-        if deact:
-            if n_oth:
-                sp2 -= inst.Delta_T * inst.p_s * inst.B[j] * n_oth
-            sp2 -= inst.Delta_T * inst.p_c[k] * float(st.y[j, k])
-        over = (rr2, e2, d2, stor2, sp2)
+        over = rt.over
+        rr2, e2, d2 = over[0], over[1], over[2]
         # Cap upper bound on the surviving cells: `max_commit`'s chain
         # starts from min(r_rem, err_cap, del_cap) and the (8g) compute
         # term and only min()s further, so any cell whose bound is already

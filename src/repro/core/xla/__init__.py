@@ -1,0 +1,51 @@
+"""XLA-batched allocator engine — lazy, jax-free entry point.
+
+This package hosts the ``engine="xla"`` tier of the allocator: the hot
+numeric core of GH Phase-2 ranking and the local search's candidate
+screen run as jitted XLA programs over device-resident instance tensors,
+with every multi-start ordering evaluated in lockstep as a batch lane.
+The numpy engine (`core.agh.agh`) remains the bit-exact oracle and the
+default; this tier must only ever match or beat its objective (enforced
+by tests/test_engine_xla.py).
+
+Importing *this* module never imports jax — the heavy modules
+(`tensors`, `kernels`, `engine`) load on first use via `load_engine()`,
+so ``from repro import plan`` stays jax-free unless ``engine="xla"`` is
+actually requested.
+"""
+from __future__ import annotations
+
+
+class EngineUnavailableError(RuntimeError):
+    """Raised when ``engine="xla"`` is requested but jax is not importable.
+
+    Carries an actionable message naming the missing extra, so callers on
+    jax-free hosts see exactly what to install rather than a bare
+    ModuleNotFoundError from deep inside the registry adapter.
+    """
+
+
+def load_engine():
+    """Import and return the XLA engine module (`repro.core.xla.engine`).
+
+    The import happens here, not at package import, so jax is only paid
+    for when the xla tier is requested.  Raises `EngineUnavailableError`
+    with install guidance when jax is absent.
+    """
+    try:
+        from . import engine
+    except ImportError as exc:
+        raise EngineUnavailableError(
+            "engine='xla' requires jax, which is not installed in this "
+            "environment. Install the accelerator extra (pip install "
+            "jax) or use the default engine='numpy'."
+        ) from exc
+    return engine
+
+
+def agh_xla(*args, **kwargs):
+    """Convenience delegate to `repro.core.xla.engine.agh_xla` (lazy)."""
+    return load_engine().agh_xla(*args, **kwargs)
+
+
+__all__ = ["EngineUnavailableError", "load_engine", "agh_xla"]

@@ -1,0 +1,566 @@
+"""The ``engine="xla"`` AGH driver: host-orchestrated, device-scored.
+
+Multi-start becomes a batched lane axis.  Every ordering (plus the warm
+seed, when given) gets its own numpy `State` lane; the lanes advance in
+lockstep and the expensive grid arithmetic of each step — GH Phase-2's
+M2 ranking keys and the local search's relocate screen — runs as one
+jitted XLA call over all lanes at once (`core/xla/kernels.py`), against
+instance tensors resident on the device (`core/xla/tensors.py`).  All
+state mutation stays on the host and goes through the numpy engine's own
+exact machinery (`commit`, `remove_assignment`, `score_moves_batch`,
+`_try_drain_batched`), which is what anchors the <=-objective contract:
+
+* Phase 2 runs the exact `_phase2_walk` per lane; only the walk's input
+  keys come from the device, computed by the same formulas as
+  `rank_keys_all` in float64 (active-cell overrides are computed on the
+  host with exact numpy arithmetic and scattered in).
+* The relocate sweep batch-screens its dirty sources on the device at
+  sweep-start state; a source that fails the screen — a sound
+  over-approximation of `score_moves_batch`'s improvement and cap-bound
+  filters, with slack absorbing XLA fusion ulps — is marked clean
+  without the exact scan, but only while the sweep has applied no move
+  (until then the screened state IS the live state, so a trusted clean
+  is exactly a live scan's conclusion; the first move invalidates all
+  remaining verdicts and the sweep falls back to exact scans).  Clean
+  marking is therefore identical to the numpy engine's dirty-source
+  protocol and each lane's descent is bit-identical to the numpy
+  lane's; every applied move is exact-validated strictly improving, so
+  descent is monotone, and the terminating verification rescan (no
+  moves => all verdicts computed at the true fixed point) guarantees no
+  improving move is missed.  A cost-aware gate measures device vs
+  host-scan time online and bypasses the screen (all-True verdicts =
+  plain numpy protocol, same results) whenever it cannot pay — e.g. on
+  1-core hosts where the kernel is memory-bound at host-scan cost.
+* Construction runs on every lane; improvement runs in lane-order waves
+  with the sequential early-stop rule replayed between waves, so the
+  improved prefix is always a superset of the sequential driver's
+  evaluated set.  The reduction scans that prefix in ordering-index
+  order with the strict-improvement rule — never worse than the
+  sequential early-stop protocol it replaces.
+
+The numpy engine remains the default and the oracle:
+tests/test_engine_xla.py holds this engine to objective <= numpy's
+(within float-reassociation tolerance) on the whole equivalence suite,
+with feasibility checked by the frozen scalar path.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from ..agh import (_adaptive_R, _assert_state_consistent,
+                   _consolidate_batched, _invalidate_sources, _orderings)
+from ..gh import _phase1, _phase2_prep, _phase2_walk
+from ..instance import Instance
+from ..mechanisms import (DestCache, State, commit, deployment_state,
+                          remove_assignment, removal_terms,
+                          score_moves_batch, solution_from_state,
+                          state_objective, state_restore, state_snapshot)
+from ..solution import Solution, is_feasible
+from . import kernels
+from .tensors import tensors_for
+
+# Source-chunk caps for one screen call: bounded transient [S, J*K]
+# buffers; the smaller cap kicks in when the active-cell axis is wide.
+_SCREEN_CHUNK = 4096
+_SCREEN_CHUNK_WIDE = 1024
+
+
+class _Lane:
+    """One multi-start ordering's host state inside the lockstep batch."""
+
+    __slots__ = ("st", "order", "is_warm", "cache", "clean", "active",
+                 "jj", "kk")
+
+    def __init__(self, st: State, order: np.ndarray, is_warm: bool = False):
+        self.st = st
+        self.order = order
+        self.is_warm = is_warm
+        self.cache: DestCache | None = None
+        self.clean: set | None = None
+        self.active: np.ndarray | None = None
+        self.jj: np.ndarray | None = None
+        self.kk: np.ndarray | None = None
+
+
+def _chunked(seq, width):
+    if not width or width >= len(seq):
+        yield seq
+        return
+    for i in range(0, len(seq), width):
+        yield seq[i:i + width]
+
+
+# ---------------------------------------------------------------------------
+# Phase 2 in lockstep: device keys, exact host walk
+# ---------------------------------------------------------------------------
+
+def _phase2_item(ln: _Lane, i: int, c_arr: np.ndarray,
+                 d_sel: np.ndarray) -> tuple:
+    """Kernel inputs for one lane at type `i`: the type-local scalars and
+    the active-cell override vectors, computed with the exact elementwise
+    numpy arithmetic of `rank_keys_all` restricted to the active cells."""
+    st = ln.st
+    inst = st.inst
+    jj, kk = ln.jj, ln.kk
+    cc = c_arr[jj, kk]
+    ccl = np.maximum(cc, 0)
+    d_a = d_sel[jj, kk]
+    inc = np.maximum(0.0, inst.nm[ccl] - st.y[jj, kk])
+    cost_a = (inst.Delta_T * (inst.p_c[kk] * inc
+                              + inst.p_s * (inst.B[jj] + inst.data_gb[i]))
+              + inst.rho[i] * d_a * 1e3)
+    return (i, st.y.reshape(-1), float(st.r_rem[i]), float(st.E_used[i]),
+            float(st.D_used[i]), jj * inst.K + kk, cost_a, d_a, cc >= 0)
+
+
+def _phase2_lockstep(lanes: list[_Lane], tx, batch_width: int | None,
+                     counters: dict) -> None:
+    inst = lanes[0].st.inst
+    for ln in lanes:
+        ln.active = ln.st.q > 0.5
+        ln.jj, ln.kk = np.nonzero(ln.active)
+    for t in range(inst.I):
+        for chunk in _chunked(lanes, batch_width):
+            preps = []
+            for ln in chunk:
+                i = int(ln.order[t])
+                c_arr, d_sel = _phase2_prep(ln.st, i, ln.active, ln.jj,
+                                            ln.kk)
+                preps.append((i, c_arr, d_sel))
+            items = [_phase2_item(ln, i, c_arr, d_sel)
+                     for ln, (i, c_arr, d_sel) in zip(chunk, preps)]
+            kap0, kap1 = kernels.phase2_keys(tx, items, counters)
+            for r, ln in enumerate(chunk):
+                i, c_arr, _ = preps[r]
+                ln.jj, ln.kk = _phase2_walk(ln.st, i, c_arr, kap0[r],
+                                            kap1[r], ln.active, ln.jj,
+                                            ln.kk)
+
+
+# ---------------------------------------------------------------------------
+# Improvement in lockstep: generator-per-lane, batched screen
+# ---------------------------------------------------------------------------
+
+def _relocate_screened(st: State, L: int, validate: bool,
+                       cache: DestCache, clean: set | None,
+                       counters: dict, rescan: bool = False):
+    """`_relocate_batched(fallback=False)` with the dirty-source scans
+    gated by a device screen: a generator that yields
+    ``("screen", obj, sources, rescan)`` once per sweep and receives the
+    verdict list.  A screen-fail verdict is trusted — the source marked
+    clean without the exact scan — only while this sweep has applied NO
+    move: until then the sweep-start state the screen evaluated IS the
+    live state, so a trusted clean is exactly what a live
+    `score_moves_batch` scan would conclude.  The first applied move
+    invalidates every remaining verdict (an applied move vacates load at
+    its source cell, which can bring destinations alive for sources the
+    sweep-start screen proved dead), and the rest of the sweep falls
+    back to exact live scans.  Clean-marking is therefore identical to
+    the numpy engine's and each lane's descent trajectory is
+    bit-identical to `_relocate_batched`'s for the same ordering — the
+    driver may answer any request with all-True verdicts (= screen off)
+    without changing results, only the time split.  Returns (via
+    StopIteration) whether any move was applied."""
+    inst = st.inst
+    K = inst.K
+    track = clean is not None
+    improving = 0
+    any_improved = False
+    while True:
+        improved = False
+        skipped = False
+        obj = state_objective(st)
+        screen_fail: set = set()
+        # One sweep-start enumeration in (type, cell) row-major order —
+        # the same order the per-type flatnonzero walk would visit.
+        ii, ff = np.nonzero(st.x.reshape(inst.I, -1) > 1e-9)
+        all_sources = [(int(i), int(f) // K, int(f) % K)
+                       for i, f in zip(ii, ff)]
+        if track:
+            sources = [s for s in all_sources if s not in clean]
+            if sources:
+                verdicts = yield ("screen", obj, sources, rescan)
+                screen_fail = {s for s, ok in zip(sources, verdicts)
+                               if not ok}
+        stats_bucket = None
+        if "_screen_stats" in counters:
+            stats_bucket = counters["_screen_stats"][
+                "rescan" if rescan else "regular"]
+        for (i, j, k) in all_sources:
+            if st.x[i, j, k] <= 1e-9:   # merged away earlier this sweep
+                continue
+            if track and (i, j, k) in clean:
+                skipped = True
+                continue
+            if (i, j, k) in screen_fail and not improved:
+                clean.add((i, j, k))
+                counters["screened_clean"] = \
+                    counters.get("screened_clean", 0) + 1
+                if stats_bucket is not None:
+                    stats_bucket[1] += 1
+                continue
+            t0 = time.perf_counter()
+            ms = score_moves_batch(st, i, j, k,
+                                   improve_below=obj - 1e-9,
+                                   cache=cache, obj_cur=obj)
+            counters["scans"] = counters.get("scans", 0) + 1
+            counters["scan_s"] = (counters.get("scan_s", 0.0)
+                                  + time.perf_counter() - t0)
+            if not ms.admissible.any():
+                if track:
+                    clean.add((i, j, k))
+                continue
+            flat = int(np.argmin(ms.obj_after))
+            j2, k2 = flat // K, flat % K
+            remove_assignment(st, i, j, k)
+            commit(st, i, j2, k2, int(ms.c_dest[j2, k2]), ms.frac)
+            obj = state_objective(st)
+            improved = True
+            counters["moves_applied"] = \
+                counters.get("moves_applied", 0) + 1
+            cache.invalidate_type(i)
+            if track and clean:
+                cells = set()
+                if np.count_nonzero(st.x[:, j, k] > 1e-9) == 1:
+                    cells.add((j, k))
+                _invalidate_sources(clean, i, cells)
+            if validate:
+                _assert_state_consistent(st)
+        any_improved |= improved
+        if improved:
+            improving += 1
+            if improving >= L:
+                break
+        else:
+            # No fallback rescan here (the caller's verification rescan
+            # covers it); `skipped` sweeps end like non-tracking ones.
+            del skipped
+            break
+    return any_improved
+
+
+def _improve_lane(ln: _Lane, L: int, validate: bool, counters: dict):
+    """`_improve_batched` as a generator: relocate/consolidate to the
+    joint fixed point, then one verification rescan (fresh screens —
+    the clean set is cleared, so every source is re-screened against the
+    current state)."""
+    st, cache, clean = ln.st, ln.cache, ln.clean
+    while True:
+        yield from _relocate_screened(st, L, validate, cache, clean,
+                                      counters)
+        if _consolidate_batched(st, validate, cache, clean,
+                                stats=counters):
+            continue
+        if not (clean is not None and clean):
+            return
+        clean.clear()
+        counters["rescans"] = counters.get("rescans", 0) + 1
+        moved = yield from _relocate_screened(st, L, validate, cache,
+                                              clean, counters,
+                                              rescan=True)
+        if not moved:
+            return
+        _consolidate_batched(st, validate, cache, clean, stats=counters)
+
+
+# Cost-aware adaptive screen policy.  Screening a source is profitable
+# exactly when the device time it costs is below the host-scan time its
+# expected TRUSTED clean verdict saves (verdicts after a sweep's first
+# applied move are discarded, so only trusted cleans save a scan):
+#
+#     dev_s / screened  <=  trusted_rate * scan_s / scans
+#
+# All four quantities are measured online (the kernel wall clock and the
+# exact `score_moves_batch` wall clock accumulate in the solve's
+# counters), so the gate self-tunes per host: on a many-core box the
+# threaded XLA kernel amortizes far below the per-source scan cost and
+# the screen stays on; on a 1-core CI container the kernel is
+# memory-bound at roughly scan cost and no clean rate can justify it, so
+# the screen shuts off after warmup and the sweep degrades to the plain
+# numpy dirty-source protocol.  Clean rates differ sharply between
+# regular sweeps (early sweeps: most sources genuinely move) and
+# verification rescans (fixed point: almost nothing moves), so the two
+# are gated as separate buckets.  The verdict set never changes results
+# — a bypassed request just scans exactly — only where the time goes.
+_SCREEN_WARMUP = 64
+
+
+def _screen_worthwhile(counters: dict, bucket: list) -> bool:
+    """The cost-aware gate: device cost per screened source vs the scan
+    time a trusted clean verdict saves, at this bucket's observed
+    trusted-clean rate."""
+    shots, trusted = bucket
+    if shots < _SCREEN_WARMUP:
+        return True
+    screened = counters.get("screen_sources", 0)
+    scans = counters.get("scans", 0)
+    if not screened or not scans:
+        return True
+    dev_per_src = counters.get("screen_s", 0.0) / screened
+    scan_per_src = counters.get("scan_s", 0.0) / scans
+    return dev_per_src <= (trusted / shots) * scan_per_src
+
+
+def _screen_batch(tx, requests: list[tuple], load: np.ndarray,
+                  counters: dict) -> list[np.ndarray]:
+    """Serve a batch of screen requests — one per lane — with as few
+    padded kernel calls as possible.
+
+    ``requests[r] = (lane_idx, st, obj, sources, rescan)``.  Builds one
+    (lane, type) group row per distinct source type and the per-source
+    closed-form removal scalars (`removal_terms` — the same values the
+    exact scan consumes), chunks the stacked source list, and returns
+    one verdict array per request.  Requests skipped by the cost-aware
+    policy get all-True verdicts (screen off = the plain numpy
+    dirty-source protocol)."""
+    inst = tx.inst
+    K = inst.K
+    groups: list[tuple] = []
+    gidx: dict[tuple, int] = {}
+    srcs: list[tuple] = []
+    src_req: list[tuple] = []
+    lane_act: dict[int, tuple] = {}
+    screen_stats = counters.get("_screen_stats")
+    for r, (lane_idx, st, obj, sources, rescan) in enumerate(requests):
+        if screen_stats is not None:
+            bucket = screen_stats["rescan" if rescan else "regular"]
+            if not _screen_worthwhile(counters, bucket):
+                counters["screen_bypassed"] = \
+                    counters.get("screen_bypassed", 0) + len(sources)
+                continue    # all-True verdicts: every source scans exactly
+            bucket[0] += len(sources)
+        load[lane_idx] = st.load.reshape(-1)
+        if lane_idx not in lane_act:
+            jj, kk = np.nonzero(st.cfg >= 0)
+            lane_act[lane_idx] = (jj, kk, jj * K + kk,
+                                  inst.nm[st.cfg[jj, kk]].astype(float))
+        jj, kk, a_jk, a_nm = lane_act[lane_idx]
+        # The screen relaxes the exact filters by `slack` so device-side
+        # fusion ulps can only ever add false passes, never false fails.
+        slack = 1e-6 * max(1.0, abs(obj))
+        for n, (i, j, k) in enumerate(sources):
+            key = (lane_idx, i)
+            g = gidx.get(key)
+            if g is None:
+                c_act = st.cfg[jj, kk]
+                d_act = inst.D_cfg[i, jj, kk, c_act]
+                g = gidx[key] = len(groups)
+                groups.append((lane_idx, i,
+                               (st.z[i] < 0.5).reshape(-1), a_jk, a_nm,
+                               d_act, d_act <= inst.Delta[i]))
+            rt = removal_terms(st, i, j, k)
+            base = obj - rt.gain + inst.Delta_T * (inst.p_s * rt.data)
+            rr2, e2, d2 = rt.over[0], rt.over[1], rt.over[2]
+            srcs.append((g, j * K + k,
+                         float(inst.rho[i]) * 1e3 * rt.frac,
+                         (obj - 1e-9) - base + slack,
+                         rr2, inst.eps[i] - e2, inst.Delta[i] - d2,
+                         rt.frac - 1e-9 - slack))
+            src_req.append((r, n))
+    out = [np.ones(len(req[3]), dtype=bool) for req in requests]
+    a_max = max((g[3].shape[0] for g in groups), default=0)
+    chunk = _SCREEN_CHUNK if a_max <= 1024 else _SCREEN_CHUNK_WIDE
+    for lo in range(0, len(srcs), chunk):
+        part = srcs[lo:lo + chunk]
+        # Re-index this chunk's groups compactly so the group axis stays
+        # inside its bucket.
+        remap: dict[int, int] = {}
+        sub_groups: list[tuple] = []
+        sub_srcs: list[tuple] = []
+        for s in part:
+            g = s[0]
+            ng = remap.get(g)
+            if ng is None:
+                ng = remap[g] = len(sub_groups)
+                sub_groups.append(groups[g])
+            sub_srcs.append((ng,) + s[1:])
+        t0 = time.perf_counter()
+        alive = kernels.screen_sources(tx, sub_groups, sub_srcs, load,
+                                       counters)
+        counters["screen_s"] = (counters.get("screen_s", 0.0)
+                                + time.perf_counter() - t0)
+        for (r, n), v in zip(src_req[lo:lo + chunk], alive):
+            out[r][n] = bool(v)
+    return out
+
+
+def _improve_wave(wave: list[_Lane], offset: int, tx, L: int,
+                  validate: bool, incremental: bool, counters: dict,
+                  load: np.ndarray) -> None:
+    """Run the improvement loop of one wave of lanes in lockstep.
+
+    ``offset`` is the wave's position in the full lane list — lane
+    indices into the (solve-constant) ``load`` buffer stay global so the
+    screen kernel's compiled shape never changes between waves."""
+    pending: list[tuple] = []
+    for idx, ln in enumerate(wave):
+        ln.cache = DestCache(ln.st)
+        ln.clean = set() if incremental else None
+        gen = _improve_lane(ln, L, validate, counters)
+        try:
+            req = gen.send(None)
+            pending.append((offset + idx, ln, gen, req))
+        except StopIteration:
+            pass
+    while pending:
+        requests = [(idx, ln.st, req[1], req[2], req[3])
+                    for idx, ln, gen, req in pending]
+        verdicts = _screen_batch(tx, requests, load, counters)
+        nxt = []
+        for (idx, ln, gen, _), v in zip(pending, verdicts):
+            try:
+                req = gen.send(v)
+                nxt.append((idx, ln, gen, req))
+            except StopIteration:
+                pass
+        pending = nxt
+
+
+def _improve_lockstep(lanes: list[_Lane], tx, L: int, validate: bool,
+                      incremental: bool, patience: int, counters: dict,
+                      batch_width: int | None = None) -> int:
+    """Improve lanes in lane-order waves with the sequential early-stop
+    rule replayed between waves.
+
+    The numpy sequential driver improves orderings one at a time and
+    stops after `patience` consecutive non-improvers; improving a whole
+    wave before checking means the evaluated set here is always a
+    SUPERSET of the sequential driver's prefix, so the final reduction
+    can only match or beat it — while lanes past the stop point skip
+    their (dominant-cost) local search entirely.  Returns the number of
+    lanes improved; the caller must reduce over exactly that prefix."""
+    inst = lanes[0].st.inst
+    load = np.zeros((len(lanes), inst.J * inst.K))
+    # [shots, trusted-clean] per screen bucket; the generators count the
+    # trusted side, `_screen_batch` the shots (see _screen_worthwhile).
+    counters["_screen_stats"] = {"regular": [0, 0], "rescan": [0, 0]}
+    done = 0
+    stale = 0
+    while done < len(lanes):
+        # First wave covers the warm lane plus at least patience+1
+        # orderings (the minimum the sequential rule can ever stop at);
+        # each later wave advances by exactly the lanes the sequential
+        # rule could still evaluate before stopping (`patience` minus
+        # the prefix's trailing stale streak), so the improved prefix
+        # never overshoots the sequential stop point by more than the
+        # wave that contains it.  A `batch_width` cap shrinks the waves,
+        # which replays the stop rule more often — the evaluated prefix
+        # stays a superset of the sequential driver's for any wave
+        # partition.
+        take = (max(patience + 1, 8) + sum(ln.is_warm for ln in lanes)
+                if done == 0 else max(patience - stale, 1))
+        if batch_width:
+            take = min(take, batch_width)
+        wave = lanes[done:done + take]
+        _improve_wave(wave, done, tx, L, validate, incremental, counters,
+                      load)
+        done += len(wave)
+        best_obj, stale = np.inf, 0
+        for ln in lanes[:done]:
+            obj = state_objective(ln.st)
+            if ln.is_warm:     # warm seed initializes best, wins ties
+                best_obj = obj
+            elif obj < best_obj - 1e-9:
+                best_obj, stale = obj, 0
+            else:
+                stale += 1
+                if stale >= patience:
+                    return done
+    return done
+
+
+# ---------------------------------------------------------------------------
+# Driver
+# ---------------------------------------------------------------------------
+
+def agh_xla(inst: Instance, R: int | None = None, L: int = 3,
+            seed: int = 0, patience: int = 5, validate: bool = False,
+            local_search: str = "batched", workers: int | None = None,
+            warm_start: Solution | None = None,
+            priority_orders: list[np.ndarray] | None = None,
+            stats: dict | None = None,
+            batch_width: int | None = None) -> Solution:
+    """AGH on the XLA engine — drop-in for `core.agh.agh`.
+
+    Construction (Phase 2) runs on every lane; the improvement loop
+    honors `patience` at wave granularity — lanes improve in
+    device-batched waves and the sequential early-stop rule is replayed
+    between waves, so the evaluated set is always a superset of the
+    sequential numpy driver's and the returned objective can only match
+    or beat it.  `workers` is accepted for signature compatibility and
+    ignored (the lane batch replaces the process pool).  `batch_width`
+    caps how many lanes advance together — per device call in the
+    Phase-2 lockstep and per improvement wave — the knob behind the
+    benchmark's batch-width scaling curve; ``None`` batches all lanes at
+    once.  Narrower waves replay the early-stop rule more often (width 1
+    = the exact sequential protocol), so results across widths are
+    dominance-ordered, not identical, unless patience is effectively
+    infinite.
+    """
+    t0 = time.perf_counter()
+    if local_search == "reference":
+        raise ValueError("engine='xla' does not implement "
+                         "local_search='reference'; use 'batched' or "
+                         "'batched-rescan'")
+    del workers   # the lane batch replaces the process pool
+    incremental = local_search != "batched-rescan"
+    rng = np.random.default_rng(seed)
+    if R is None:
+        R = _adaptive_R(inst, batched=True)
+    orders = _orderings(inst, R, rng)
+    if priority_orders:
+        orders = [np.asarray(o) for o in priority_orders] + orders
+    tx = tensors_for(inst)
+    counters: dict = {}
+    # Phase 1 is ordering-independent: one run, shared snapshot.
+    st0 = State.fresh(inst)
+    _phase1(st0)
+    p1 = state_snapshot(st0)
+    lanes: list[_Lane] = []
+    if warm_start is not None:
+        lanes.append(_Lane(deployment_state(inst, warm_start),
+                           np.argsort(-inst.lam), is_warm=True))
+    for order in orders:
+        st = State.fresh(inst)
+        state_restore(st, p1)
+        lanes.append(_Lane(st, np.asarray(order)))
+    _phase2_lockstep(lanes, tx, batch_width, counters)
+    done = _improve_lockstep(lanes, tx, L, validate, incremental,
+                             patience, counters, batch_width)
+    # Deterministic reduction over the improved prefix, in lane order;
+    # the warm lane comes first and therefore wins ties, matching the
+    # numpy warm-start protocol.
+    best, best_obj, best_order, warm_obj = None, np.inf, None, None
+    n_warm = 0
+    for ln in lanes[:done]:
+        obj = state_objective(ln.st)
+        if ln.is_warm:
+            warm_obj = obj
+            n_warm += 1
+        if obj < best_obj - 1e-9:
+            best_obj = obj
+            best = solution_from_state(inst, ln.st)
+            best_order = None if ln.is_warm else ln.order
+    assert best is not None
+    if stats is not None:
+        stats.update(engine="xla", restarts=R,
+                     warm_started=warm_start is not None,
+                     local_search=local_search,
+                     orderings_evaluated=done - n_warm,
+                     early_stopped=done < len(lanes),
+                     winning_order=(None if best_order is None
+                                    else [int(i) for i in best_order]))
+        if warm_obj is not None:
+            stats["warm_objective"] = warm_obj
+        counters.pop("_screen_stats", None)
+        stats.update(counters)
+        for key in ("scan_s", "screen_s"):
+            if key in stats:
+                stats[key] = round(stats[key], 4)
+    assert is_feasible(inst, best, enforce_zeta=False), \
+        "AGH-XLA produced an infeasible solution (engine bug)"
+    best.runtime_s = time.perf_counter() - t0
+    best.method = "AGH-XLA"
+    return best

@@ -3,6 +3,8 @@
 # sessions.  `plan()`/`PlanRequest`/`PlanResult` are the primary surface;
 # the legacy per-solver entry points in `repro.core` remain as thin,
 # bit-identical shims.
+from repro.core.xla import EngineUnavailableError  # jax-free module
+
 from .api import PlanOptions, PlanRequest, PlanResult, plan
 from .registry import (SolverSpec, UnknownSolverError, get_solver,
                        register_solver, solver_names, unregister_solver)
@@ -11,6 +13,7 @@ from .specs import (SCENARIOS, FleetSpec, ScenarioSpec, SLOSpec,
                     WorkloadSpec, list_scenarios, scenario)
 
 __all__ = [
+    "EngineUnavailableError",
     "PlanOptions", "PlanRequest", "PlanResult", "plan",
     "SolverSpec", "UnknownSolverError", "get_solver", "register_solver",
     "solver_names", "unregister_solver",

@@ -45,6 +45,11 @@ class PlanOptions:
     | ``patience``   | agh                | early-stop patience            |
     | ``local_search``| agh               | "batched" / "batched-rescan" / |
     |                |                    | "reference"                    |
+    | ``engine``     | agh                | "numpy" (default, the oracle)  |
+    |                |                    | / "xla" (jitted batched tier;  |
+    |                |                    | needs jax, loaded lazily)      |
+    | ``batch_width``| agh (engine=xla)   | lanes per device call in the   |
+    |                |                    | lockstep batch (None = all)    |
     | ``workers``    | agh                | multi-start fan-out width      |
     | ``validate``   | agh                | per-move debug consistency     |
     | ``order``      | gh                 | Phase-2 type ordering override |
@@ -62,6 +67,8 @@ class PlanOptions:
     passes: int = 3
     patience: int = 5
     local_search: str = "batched"
+    engine: str = "numpy"
+    batch_width: int | None = None
     workers: int | None = None
     validate: bool = False
     order: tuple[int, ...] | None = None
@@ -179,19 +186,27 @@ class PlanResult:
 def plan(request: PlanRequest | str | None = None, *,
          instance: Instance | None = None, scenario: object | None = None,
          options: PlanOptions | None = None,
-         warm_start: Solution | None = None) -> PlanResult:
+         warm_start: Solution | None = None,
+         engine: str | None = None) -> PlanResult:
     """Solve one planning request through the registry.
 
     Accepts a full `PlanRequest`, or the convenience form
     ``plan("agh", instance=inst, options=PlanOptions(...))``.
+    ``engine=`` is convenience-form shorthand for
+    ``options=dataclasses.replace(options, engine=...)`` — e.g.
+    ``plan(instance=inst, engine="xla")`` runs AGH on the jitted XLA
+    tier (requires jax; raises `EngineUnavailableError` otherwise).
     """
     if isinstance(request, str) or request is None:
+        opts = options or PlanOptions()
+        if engine is not None:
+            opts = dataclasses.replace(opts, engine=engine)
         request = PlanRequest(solver=request or "agh", instance=instance,
-                              scenario=scenario,
-                              options=options or PlanOptions(),
+                              scenario=scenario, options=opts,
                               warm_start=warm_start)
     elif (instance is not None or scenario is not None
-          or options is not None or warm_start is not None):
+          or options is not None or warm_start is not None
+          or engine is not None):
         raise ValueError("pass either a PlanRequest or keyword fields, "
                          "not both")
     spec = get_solver(request.solver)

@@ -33,11 +33,27 @@ def _solve_agh(inst, options, warm_start):
     # produced the incumbent).  GH instead treats it as THE ordering.
     priority = ([np.asarray(options.order)]
                 if options.order is not None else None)
-    sol = agh(inst, R=options.restarts, L=options.passes,
-              seed=options.seed, patience=options.patience,
-              validate=options.validate, local_search=options.local_search,
-              workers=options.workers, warm_start=warm_start,
-              priority_orders=priority, stats=stats)
+    engine = getattr(options, "engine", "numpy") or "numpy"
+    extra = {}
+    if engine == "xla":
+        # Lazy tier load: jax is only imported when the xla engine is
+        # actually requested (`from repro import plan` stays jax-free;
+        # a missing jax surfaces as EngineUnavailableError, not a deep
+        # ModuleNotFoundError).
+        from repro.core.xla import load_engine
+        solver = load_engine().agh_xla
+        extra["batch_width"] = options.batch_width
+    elif engine == "numpy":
+        solver = agh
+    else:
+        raise ValueError(f"unknown engine {engine!r}: "
+                         "expected 'numpy' or 'xla'")
+    sol = solver(inst, R=options.restarts, L=options.passes, **extra,
+                 seed=options.seed, patience=options.patience,
+                 validate=options.validate,
+                 local_search=options.local_search,
+                 workers=options.workers, warm_start=warm_start,
+                 priority_orders=priority, stats=stats)
     stats["active_pairs"] = int(np.sum(sol.q > 0.5))
     return sol, stats
 

@@ -44,9 +44,15 @@ class PlanSession:
     first solve always uses the full `options` as given.  Solvers that
     cannot warm-start (everything but AGH today) fall back to cold solves
     on every call — the session is still useful as a uniform driver.
+
+    ``engine=`` is shorthand for setting ``options.engine``:
+    ``PlanSession(engine="xla")`` runs both the cold solve and every
+    warm replan on the jitted XLA tier (the replan option override goes
+    through `dataclasses.replace`, so the engine choice survives it).
     """
     solver: str = "agh"
     options: PlanOptions = dataclasses.field(default_factory=PlanOptions)
+    engine: str | None = None
     replan_patience: int = 2
     replan_restarts: int = 0
     incumbent: Solution | None = None
@@ -55,6 +61,11 @@ class PlanSession:
     winning_order: tuple[int, ...] | None = None
     plans: int = 0
     warm_replans: int = 0
+
+    def __post_init__(self) -> None:
+        if self.engine is not None:
+            self.options = dataclasses.replace(self.options,
+                                               engine=self.engine)
 
     def plan(self, instance: Instance | None = None,
              scenario: ScenarioSpec | str | None = None) -> PlanResult:
