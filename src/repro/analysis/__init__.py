@@ -1,0 +1,2 @@
+"""Offline analysis tooling: model cost estimators and the static
+invariant checker (`repro.analysis.lint`)."""

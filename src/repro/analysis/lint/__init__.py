@@ -1,0 +1,28 @@
+"""AST-based invariant checker for the repro engine.
+
+Static enforcement of the contracts the equivalence suites check
+dynamically: sanctioned State/DestCache mutation (RPR1xx), deterministic
+engine paths (RPR2xx), f64 dtype discipline in the xla tier (RPR3xx),
+and jit/pallas trace purity (RPR4xx).  See core/README.md "Invariants &
+static enforcement" for the contract-to-rule map and the suppression
+policy.
+
+Usage::
+
+    python -m repro.analysis.lint src/
+    python -m repro.analysis.lint --select RPR101,RPR2 src/repro/core/
+    python -m repro.analysis.lint --list-rules
+
+Programmatic: `run_paths` / `lint_source` return structured reports.
+"""
+from .diagnostics import Diagnostic, Rule
+from .registry import (BaseChecker, FileContext, all_checkers, all_rules,
+                       register_checker)
+from .runner import (LintResult, lint_file, lint_source, run_paths,
+                     write_baseline)
+
+__all__ = [
+    "BaseChecker", "Diagnostic", "FileContext", "LintResult", "Rule",
+    "all_checkers", "all_rules", "lint_file", "lint_source",
+    "register_checker", "run_paths", "write_baseline",
+]

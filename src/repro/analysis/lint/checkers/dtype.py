@@ -1,0 +1,149 @@
+"""f64 dtype discipline (RPR301-303) in the XLA tier and the kernels.
+
+The numpy oracle runs in float64 and the xla engine's <=-objective
+contract leaves no room for f32 rounding in ranking keys — but jax
+*defaults* to float32, so any implicit-dtype `jnp` construction is a
+latent precision downgrade that only fires where the global x64 flag is
+not set (exactly the situation in an embedding application).  Hence:
+
+* RPR301 — `jnp` array constructions in ``core/xla/`` and ``kernels/``
+  must pin a dtype, either by keyword or in the positional dtype slot
+  (``jnp.zeros(shape, base.dtype)`` counts; ``*_like`` helpers inherit
+  and are exempt).
+* RPR302 — explicit f32 narrowing (``.astype(jnp.float32)``,
+  ``np.float32(...)``) is banned in ``core/xla/`` specifically.  The
+  pallas kernels are OUT of scope by design: f32 is the MXU's native
+  accumulate dtype and their kernels/refs narrow deliberately (see
+  core/README.md "Invariants & static enforcement").
+* RPR303 — bare float literals passed positionally to a known-jitted
+  callable are weakly typed and can demote the whole computation; route
+  them through an explicitly-dtyped array or a keyword default.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from ..diagnostics import Diagnostic, Rule
+from ..registry import BaseChecker, FileContext, register_checker
+
+#: constructor -> index of its positional dtype slot (None = kwarg only)
+_JNP_CREATORS: dict[str, int | None] = {
+    "zeros": 1, "ones": 1, "empty": 1, "full": 2, "array": 1,
+    "asarray": 1, "arange": None, "linspace": None, "eye": None,
+    "identity": None, "tri": None,
+}
+
+_F32_NAMES = frozenset({"float32", "bfloat16", "float16"})
+
+
+def _dotted(node: ast.expr) -> tuple[str, ...]:
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+    return tuple(reversed(parts))
+
+
+def _collect_jitted_names(tree: ast.Module) -> set[str]:
+    """Function names that are jitted at def site or rebound via
+    ``g = jax.jit(f)`` — call sites of these are RPR303 targets."""
+    jitted: set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for dec in node.decorator_list:
+                d = dec.func if isinstance(dec, ast.Call) else dec
+                dd = _dotted(d)
+                if dd[-1:] == ("jit",):
+                    jitted.add(node.name)
+                elif dd[-1:] == ("partial",) and isinstance(dec, ast.Call) \
+                        and dec.args \
+                        and _dotted(dec.args[0])[-1:] == ("jit",):
+                    jitted.add(node.name)
+        elif isinstance(node, ast.Assign) \
+                and isinstance(node.value, ast.Call) \
+                and _dotted(node.value.func)[-1:] == ("jit",):
+            for t in node.targets:
+                if isinstance(t, ast.Name):
+                    jitted.add(t.id)
+    return jitted
+
+
+@register_checker
+class DtypeChecker(BaseChecker):
+    scope = ("repro/core/xla/", "repro/kernels/")
+    rules = (
+        Rule("RPR301", "implicit-jnp-dtype",
+             "jnp array construction must pin an explicit dtype"),
+        Rule("RPR302", "f32-narrowing",
+             "no float32/bf16 narrowing in the f64 xla engine tier"),
+        Rule("RPR303", "weak-float-literal-into-jit",
+             "float literals entering jitted callables are weakly typed"),
+    )
+
+    #: RPR302 applies only here; `kernels/` compute in f32 by design.
+    _NARROW_SCOPE = ("repro/core/xla/",)
+
+    def check(self, ctx: FileContext) -> Iterator[Diagnostic]:
+        jitted = _collect_jitted_names(ctx.tree)
+        narrow = any(s in ctx.posix for s in self._NARROW_SCOPE)
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            yield from self._check_creation(ctx, node)
+            if narrow:
+                yield from self._check_narrowing(ctx, node)
+            yield from self._check_weak_literal(ctx, node, jitted)
+
+    def _check_creation(self, ctx: FileContext, node: ast.Call
+                        ) -> Iterator[Diagnostic]:
+        dd = _dotted(node.func)
+        if len(dd) != 2 or dd[0] != "jnp" or dd[1] not in _JNP_CREATORS:
+            return
+        if any(kw.arg == "dtype" for kw in node.keywords):
+            return
+        slot = _JNP_CREATORS[dd[1]]
+        if slot is not None and len(node.args) > slot:
+            return      # positional dtype slot filled
+        yield Diagnostic(
+            ctx.display, node.lineno, node.col_offset, "RPR301",
+            f"jnp.{dd[1]} without an explicit dtype defaults to f32 "
+            f"when x64 is off — pin dtype= (f64 tier) explicitly")
+
+    def _check_narrowing(self, ctx: FileContext, node: ast.Call
+                         ) -> Iterator[Diagnostic]:
+        f = node.func
+        # x.astype(jnp.float32 / np.float32 / "float32")
+        if isinstance(f, ast.Attribute) and f.attr == "astype" \
+                and node.args:
+            tgt = node.args[0]
+            name = _dotted(tgt)[-1:] or (None,)
+            if name[0] in _F32_NAMES or (
+                    isinstance(tgt, ast.Constant)
+                    and tgt.value in _F32_NAMES):
+                yield Diagnostic(
+                    ctx.display, node.lineno, node.col_offset, "RPR302",
+                    "f32 narrowing inside the f64 xla engine tier")
+            return
+        # np.float32(x) / jnp.float32(x)
+        dd = _dotted(f)
+        if len(dd) == 2 and dd[1] in _F32_NAMES:
+            yield Diagnostic(
+                ctx.display, node.lineno, node.col_offset, "RPR302",
+                f"{'.'.join(dd)} cast inside the f64 xla engine tier")
+
+    def _check_weak_literal(self, ctx: FileContext, node: ast.Call,
+                            jitted: set[str]) -> Iterator[Diagnostic]:
+        if not (isinstance(node.func, ast.Name)
+                and node.func.id in jitted):
+            return
+        for a in node.args:
+            v = a.operand if isinstance(a, ast.UnaryOp) else a
+            if isinstance(v, ast.Constant) and isinstance(v.value, float):
+                yield Diagnostic(
+                    ctx.display, a.lineno, a.col_offset, "RPR303",
+                    f"weak float literal passed into jitted "
+                    f"{node.func.id}() — wrap in an explicitly-dtyped "
+                    f"array so promotion cannot demote the trace")

@@ -1,0 +1,306 @@
+"""jit/trace purity (RPR401-403) in jitted functions and pallas kernels.
+
+Python control flow inside a traced function runs at TRACE time: an
+``if`` on a traced value raises `TracerBoolConversionError` at best and
+silently bakes one branch into the compiled program at worst; the same
+goes for ``.item()``/``float()``/``bool()`` escapes and data-dependent
+``range()`` bounds.  This pass finds the traced functions, partitions
+their parameters into traced vs. static, propagates staticness through
+locals, and flags Python-level control flow on traced values.
+
+What counts as traced/static:
+
+* ``@jax.jit`` positional parameters are traced;
+  ``functools.partial(jax.jit, static_argnames=(...))`` names are
+  static.
+* pallas kernel bodies are found via ``pl.pallas_call(fn)`` /
+  ``pl.pallas_call(functools.partial(fn, kw=...))`` — their positional
+  (Ref) parameters are traced and their keyword-only parameters are
+  static (the repo's idiom binds all compile-time scalars keyword-only
+  through the partial).
+* ``.shape`` / ``.dtype`` / ``.ndim`` / ``.size`` of anything are
+  static (trace-time constants), as is arithmetic on static values.
+* ``pl.when`` / ``jax.lax.cond`` / ``jnp.where`` are the sanctioned
+  branching forms — they are calls, not Python ``if``, so they pass
+  untouched.
+"""
+from __future__ import annotations
+
+import ast
+import enum
+from typing import Iterator
+
+from ..diagnostics import Diagnostic, Rule
+from ..registry import BaseChecker, FileContext, register_checker
+
+
+class Taint(enum.Enum):
+    STATIC = 0
+    TRACED = 1
+    UNKNOWN = 2     # e.g. results of arbitrary calls — never flagged
+
+
+_STATIC_ATTRS = frozenset({"shape", "dtype", "ndim", "size", "itemsize"})
+_HOST_FORCERS = frozenset({"float", "int", "bool", "complex"})
+
+
+def _dotted(node: ast.expr) -> tuple[str, ...]:
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+    return tuple(reversed(parts))
+
+
+def _jit_static_names(fn: ast.FunctionDef) -> tuple[bool, frozenset[str]]:
+    """(is_jitted, static param names) from the def's decorators."""
+    for dec in fn.decorator_list:
+        d = dec.func if isinstance(dec, ast.Call) else dec
+        dd = _dotted(d)
+        if dd[-1:] == ("jit",):
+            return True, frozenset()
+        if dd[-1:] == ("partial",) and isinstance(dec, ast.Call) \
+                and dec.args and _dotted(dec.args[0])[-1:] == ("jit",):
+            static: set[str] = set()
+            for kw in dec.keywords:
+                if kw.arg in ("static_argnames", "static_argnums") \
+                        and isinstance(kw.value, (ast.Tuple, ast.List)):
+                    for e in kw.value.elts:
+                        if isinstance(e, ast.Constant) \
+                                and isinstance(e.value, str):
+                            static.add(e.value)
+            return True, frozenset(static)
+    return False, frozenset()
+
+
+def _pallas_kernel_names(tree: ast.Module) -> set[str]:
+    """Function names passed (possibly through functools.partial) as the
+    kernel argument of a `pl.pallas_call`."""
+    names: set[str] = set()
+    for node in ast.walk(tree):
+        if not (isinstance(node, ast.Call)
+                and _dotted(node.func)[-1:] == ("pallas_call",)):
+            continue
+        if not node.args:
+            continue
+        k = node.args[0]
+        if isinstance(k, ast.Call) \
+                and _dotted(k.func)[-1:] == ("partial",) and k.args:
+            k = k.args[0]
+        if isinstance(k, ast.Name):
+            names.add(k.id)
+    return names
+
+
+class _FnScanner:
+    """Taint propagation + flagging over one traced function body."""
+
+    def __init__(self, ctx: FileContext, fn: ast.FunctionDef,
+                 static_names: frozenset[str], kernel: bool):
+        self.ctx = ctx
+        self.fn = fn
+        self.taint: dict[str, Taint] = {}
+        a = fn.args
+        for arg in (*a.posonlyargs, *a.args):
+            self.taint[arg.arg] = (Taint.STATIC
+                                   if arg.arg in static_names
+                                   else Taint.TRACED)
+        for arg in a.kwonlyargs:
+            # pallas idiom: compile-time scalars are keyword-only, bound
+            # by the functools.partial at the pallas_call site.
+            self.taint[arg.arg] = (Taint.STATIC
+                                   if kernel or arg.arg in static_names
+                                   else Taint.TRACED)
+
+    # -- expression taint --------------------------------------------------
+    def eval(self, node: ast.expr) -> Taint:
+        if isinstance(node, ast.Name):
+            return self.taint.get(node.id, Taint.UNKNOWN)
+        if isinstance(node, ast.Constant):
+            return Taint.STATIC
+        if isinstance(node, ast.Attribute):
+            if node.attr in _STATIC_ATTRS:
+                return Taint.STATIC
+            return self.eval(node.value)
+        if isinstance(node, ast.Subscript):
+            base = self.eval(node.value)
+            if base is Taint.STATIC:        # shape[0] etc.
+                return Taint.STATIC
+            return base
+        if isinstance(node, (ast.BinOp,)):
+            return self._join(self.eval(node.left), self.eval(node.right))
+        if isinstance(node, ast.UnaryOp):
+            return self.eval(node.operand)
+        if isinstance(node, ast.BoolOp):
+            return self._join(*(self.eval(v) for v in node.values))
+        if isinstance(node, ast.Compare):
+            return self._join(self.eval(node.left),
+                              *(self.eval(c) for c in node.comparators))
+        if isinstance(node, (ast.Tuple, ast.List)):
+            return self._join(*(self.eval(e) for e in node.elts))
+        if isinstance(node, ast.Starred):
+            return self.eval(node.value)
+        if isinstance(node, ast.IfExp):
+            return self._join(self.eval(node.body), self.eval(node.orelse))
+        if isinstance(node, ast.Call):
+            dd = _dotted(node.func)
+            if dd[:1] in (("len",),) or dd[-1:] == ("program_id",):
+                # len() of anything is static; program_id is traced.
+                return (Taint.STATIC if dd[:1] == ("len",)
+                        else Taint.TRACED)
+            args = [self.eval(a) for a in node.args]
+            args += [self.eval(kw.value) for kw in node.keywords]
+            if isinstance(node.func, ast.Attribute):
+                # method call: the receiver's taint flows through
+                # (x.sum(), x.max(), x.astype(...) on a tracer are traced)
+                args.append(self.eval(node.func.value))
+            if any(t is Taint.TRACED for t in args):
+                return Taint.TRACED
+            return Taint.UNKNOWN
+        return Taint.UNKNOWN
+
+    @staticmethod
+    def _join(*ts: Taint) -> Taint:
+        if any(t is Taint.TRACED for t in ts):
+            return Taint.TRACED
+        if all(t is Taint.STATIC for t in ts):
+            return Taint.STATIC
+        return Taint.UNKNOWN
+
+    # -- statement walk ----------------------------------------------------
+    def scan(self) -> Iterator[Diagnostic]:
+        yield from self._scan_body(self.fn.body)
+
+    def _scan_body(self, body: list[ast.stmt]) -> Iterator[Diagnostic]:
+        for node in body:
+            yield from self._scan_stmt(node)
+
+    def _scan_stmt(self, node: ast.stmt) -> Iterator[Diagnostic]:
+        if isinstance(node, ast.Assign):
+            t = self.eval(node.value)
+            for tgt in node.targets:
+                elts = tgt.elts if isinstance(tgt, (ast.Tuple, ast.List)) \
+                    else [tgt]
+                for e in elts:
+                    if isinstance(e, ast.Name):
+                        self.taint[e.id] = t
+            yield from self._scan_expr(node.value)
+        elif isinstance(node, ast.AugAssign):
+            if isinstance(node.target, ast.Name):
+                self.taint[node.target.id] = self._join(
+                    self.taint.get(node.target.id, Taint.UNKNOWN),
+                    self.eval(node.value))
+            yield from self._scan_expr(node.value)
+        elif isinstance(node, ast.If):
+            if self.eval(node.test) is Taint.TRACED:
+                yield self._diag(node, "RPR401",
+                                 "Python `if` on a traced value — use "
+                                 "jnp.where / jax.lax.cond / pl.when")
+            yield from self._scan_expr(node.test)
+            yield from self._scan_body(node.body)
+            yield from self._scan_body(node.orelse)
+        elif isinstance(node, ast.While):
+            if self.eval(node.test) is Taint.TRACED:
+                yield self._diag(node, "RPR403",
+                                 "`while` on a traced value — use "
+                                 "jax.lax.while_loop")
+            yield from self._scan_body(node.body)
+        elif isinstance(node, ast.For):
+            it = node.iter
+            traced_bound = False
+            if isinstance(it, ast.Call) \
+                    and _dotted(it.func)[-1:] == ("range",):
+                traced_bound = any(self.eval(a) is Taint.TRACED
+                                   for a in it.args)
+            elif self.eval(it) is Taint.TRACED:
+                traced_bound = True
+            if traced_bound:
+                yield self._diag(node, "RPR403",
+                                 "data-dependent Python loop bound in a "
+                                 "traced body — use jax.lax.fori_loop / "
+                                 "scan")
+            if isinstance(node.target, ast.Name):
+                self.taint[node.target.id] = Taint.STATIC
+            yield from self._scan_body(node.body)
+        elif isinstance(node, ast.Assert):
+            if self.eval(node.test) is Taint.TRACED:
+                yield self._diag(node, "RPR401",
+                                 "assert on a traced value — use "
+                                 "checkify or a static precondition")
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            # Nested helper: params take the taint of UNKNOWN (they are
+            # usually called with traced arrays); its body is scanned
+            # with the enclosing taint still visible for closures.
+            yield from self._scan_body(node.body)
+        elif isinstance(node, ast.Return) and node.value is not None:
+            yield from self._scan_expr(node.value)
+        elif isinstance(node, ast.Expr):
+            yield from self._scan_expr(node.value)
+
+    def _scan_expr(self, node: ast.expr) -> Iterator[Diagnostic]:
+        for sub in ast.walk(node):
+            if not isinstance(sub, ast.Call):
+                continue
+            # float(x) / int(x) / bool(x) on traced values
+            if isinstance(sub.func, ast.Name) \
+                    and sub.func.id in _HOST_FORCERS and sub.args:
+                if self.eval(sub.args[0]) is Taint.TRACED:
+                    yield self._diag(
+                        sub, "RPR402",
+                        f"{sub.func.id}() forces a traced value to host "
+                        f"— keep it on device or mark the arg static")
+            # x.item(), x.tolist() on traced values
+            if isinstance(sub.func, ast.Attribute) \
+                    and sub.func.attr in ("item", "tolist") \
+                    and self.eval(sub.func.value) is Taint.TRACED:
+                yield self._diag(
+                    sub, "RPR402",
+                    f".{sub.func.attr}() forces a traced value to host")
+            # np.asarray(traced) inside a traced body
+            dd = _dotted(sub.func)
+            if dd[:1] == ("np",) and dd[-1:] in (("asarray",),
+                                                 ("array",)) \
+                    and sub.args \
+                    and self.eval(sub.args[0]) is Taint.TRACED:
+                yield self._diag(
+                    sub, "RPR402",
+                    "np.asarray on a traced value materializes at trace "
+                    "time — use jnp")
+        for sub in ast.walk(node):
+            if isinstance(sub, ast.IfExp) \
+                    and self.eval(sub.test) is Taint.TRACED:
+                yield self._diag(
+                    sub, "RPR401",
+                    "conditional expression on a traced value — use "
+                    "jnp.where")
+
+    def _diag(self, node: ast.AST, code: str, msg: str) -> Diagnostic:
+        return Diagnostic(self.ctx.display, node.lineno, node.col_offset,
+                          code, f"{msg} (in `{self.fn.name}`)")
+
+
+@register_checker
+class JitPurityChecker(BaseChecker):
+    scope = ("repro/core/xla/", "repro/kernels/")
+    rules = (
+        Rule("RPR401", "python-branch-on-tracer",
+             "no Python branching on traced values in jit/pallas bodies"),
+        Rule("RPR402", "tracer-host-escape",
+             "no .item()/float()/bool() host escapes on traced values"),
+        Rule("RPR403", "data-dependent-loop-bound",
+             "Python loop bounds in traced bodies must be static"),
+    )
+
+    def check(self, ctx: FileContext) -> Iterator[Diagnostic]:
+        kernels = _pallas_kernel_names(ctx.tree)
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, (ast.FunctionDef,
+                                     ast.AsyncFunctionDef)):
+                continue
+            jitted, static = _jit_static_names(node)
+            kernel = node.name in kernels
+            if not (jitted or kernel):
+                continue
+            yield from _FnScanner(ctx, node, static, kernel).scan()

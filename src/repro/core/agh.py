@@ -43,6 +43,7 @@ import time
 
 import numpy as np
 
+from .contracts import mutates
 from .gh import _phase1, _phase2, greedy_heuristic
 from .instance import Instance
 from .mechanisms import (DestCache, State, commit, deactivate_pair,
@@ -180,6 +181,7 @@ def _relocate(st: State, L: int, ranked: list[np.ndarray],
             break
 
 
+@mutates("D_used", "q", "cfg")
 def _try_drain(st: State, j: int, k: int, validate: bool) -> bool:
     """Drain every type off pair (j,k) onto other active pairs and shut the
     pair down; keep only if all traffic lands and the objective improves.
@@ -267,6 +269,8 @@ def _invalidate_sources(clean: set, types, cells: set) -> None:
     someone else's move into it viable — are deliberately NOT tracked
     here; the verification rescan at the fixed point catches them."""
     tset = types if isinstance(types, set) else {types}
+    # repro-lint: ignore[RPR203] -- feeds difference_update (an order-
+    # insensitive set reduction); iteration order cannot reach any output.
     stale = [s for s in clean if s[0] in tset or (s[1], s[2]) in cells]
     clean.difference_update(stale)
 
@@ -477,6 +481,7 @@ def _try_drain_batched(st: State, j: int, k: int,
     return None
 
 
+@mutates("cfg_dirty")
 def _consolidate_batched(st: State, validate: bool,
                          cache: DestCache | None = None,
                          clean: set | None = None,

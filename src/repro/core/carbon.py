@@ -41,7 +41,7 @@ def carbon_rates(inst: Instance,
     rates = np.zeros(inst.K)
     for k, name in enumerate(inst.tier_names):
         hw = name.split("-")[0]
-        for key, kw in _POWER_KW.items():
+        for key in _POWER_KW:
             if name.startswith(key):
                 hw = key
                 break

@@ -22,6 +22,7 @@ import time
 
 import numpy as np
 
+from .contracts import mutates
 from .instance import Instance
 from .mechanisms import (State, commit, m3_upgrade, max_commit,
                          max_commit_batch, rank_keys_all, solution_from_state,
@@ -29,6 +30,7 @@ from .mechanisms import (State, commit, m3_upgrade, max_commit,
 from .solution import Solution
 
 
+@mutates("q", "cfg", "y", "spend", "uncovered")
 def _phase1(st: State) -> None:
     inst = st.inst
     I, J, K = inst.I, inst.J, inst.K
@@ -45,6 +47,8 @@ def _phase1(st: State) -> None:
     cap = inst.phase1_beta * inst.delta
     while st.uncovered and st.spend < cap:
         unc = np.zeros(I, dtype=bool)
+        # repro-lint: ignore[RPR203] -- boolean-mask fill: every index is
+        # set True regardless of visit order, so set order cannot leak.
         unc[list(st.uncovered)] = True
         members = cover & unc[:, None, None]              # [I,J,K]
         cnt = members.sum(axis=0)                         # [J,K]

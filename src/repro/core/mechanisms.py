@@ -29,6 +29,7 @@ import dataclasses
 
 import numpy as np
 
+from .contracts import mutates
 from .instance import KB_PER_GB, Instance
 
 
@@ -466,6 +467,7 @@ class DestCache:
         # flag, and `rows` only diffs cfg_seen while it is up.
         self.cfg_dirty = False
 
+    @mutates("zbuilt", "cfg_dirty")
     def invalidate_type(self, i: int) -> None:
         """Notify the cache of an applied move/drain placement of type i:
         its admission row z[i] changed (static-cost row rebuilds on next
@@ -474,6 +476,7 @@ class DestCache:
         self.zbuilt[i] = False
         self.cfg_dirty = True
 
+    @mutates("c_dest", "d_sel", "ok", "rental", "dcost", "cfg_seen")
     def _sync(self, st: State) -> None:
         changed = np.flatnonzero(st.cfg != self.cfg_seen)
         if changed.size == 0:
@@ -504,6 +507,8 @@ class DestCache:
                     + np.where(st.z[:, j, k] < 0.5, inst.p_s_B[j], 0.0))
             self.cfg_seen[j, k] = c
 
+    @mutates("cfg_dirty", "c_dest", "d_sel", "ok", "rental", "dcost",
+             "built", "zbuilt")
     def rows(self, st: State, i: int):
         """Synced (c_dest, d_sel, ok, rental, dcost) rows for type i
         (built on first use).  The returned arrays are cache-owned views —
@@ -819,6 +824,8 @@ def score_moves_batch(st: State, i: int, j: int, k: int,
                       admissible=adm, obj_after=obj_after, obj_removed=obj0)
 
 
+@mutates("x", "z", "q", "cfg", "y", "r_rem", "E_used", "D_used", "spend",
+         "kv_tok", "load", "stor_used", "uncovered")
 def commit(st: State, i: int, j: int, k: int, c: int, frac: float,
            undo: list | None = None) -> None:
     """Apply an accepted assignment to the running state, maintaining every
@@ -867,6 +874,8 @@ def commit(st: State, i: int, j: int, k: int, c: int, frac: float,
     st.uncovered.discard(i)
 
 
+@mutates("x", "z", "r_rem", "E_used", "D_used", "spend", "kv_tok", "load",
+         "stor_used")
 def remove_assignment(st: State, i: int, j: int, k: int,
                       undo: list | None = None, timed: bool = True,
                       auto_deactivate: bool = True) -> float:
@@ -908,6 +917,7 @@ def remove_assignment(st: State, i: int, j: int, k: int,
     return frac
 
 
+@mutates("z", "q", "y", "cfg", "spend", "stor_used")
 def deactivate_pair(st: State, j: int, k: int,
                     undo: list | None = None) -> None:
     """Shut pair (j,k) down: drop every remaining admission on it (model
@@ -931,6 +941,8 @@ def deactivate_pair(st: State, j: int, k: int,
     st.cfg[j, k] = -1
 
 
+@mutates("x", "z", "q", "cfg", "y", "r_rem", "E_used", "D_used", "spend",
+         "kv_tok", "load", "stor_used", "uncovered")
 def undo_all(st: State, undo: list) -> None:
     """Roll back every record pushed by `commit` / `remove_assignment`, in
     reverse order.  Restoration is exact: each record carries the previous
@@ -1008,6 +1020,8 @@ def state_snapshot(st: State) -> tuple:
             st.stor_used.copy())
 
 
+@mutates("x", "z", "q", "cfg", "y", "r_rem", "E_used", "D_used", "spend",
+         "kv_tok", "load", "stor_used", "uncovered")
 def state_restore(st: State, snap: tuple) -> None:
     (x, y, q, cfg, z, r_rem, E, D, spend, unc, kv, load, stor) = snap
     st.x[:] = x
@@ -1037,6 +1051,7 @@ def solution_from_state(inst: Instance, st: State):
     return sol
 
 
+@mutates("q", "cfg", "y", "spend")
 def deployment_state(inst: Instance, sol, ablation: frozenset = frozenset()
                      ) -> State:
     """A fresh `State` seeded with an existing solution's DEPLOYMENT —

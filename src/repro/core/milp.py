@@ -101,10 +101,10 @@ def build(inst: Instance):
     # (8d) sum_c w = q ; (8e) y = sum_c nm w
     for j in range(J):
         for k in range(K):
-            add([(ix.w(j, k, c), 1.0) for c in range(C)] + [(ix.q(j, k), -1.0)],
+            add([*((ix.w(j, k, c), 1.0) for c in range(C)), (ix.q(j, k), -1.0)],
                 0.0, 0.0)
-            add([(ix.y(j, k), 1.0)]
-                + [(ix.w(j, k, c), -float(inst.nm[c])) for c in range(C)],
+            add([(ix.y(j, k), 1.0),
+                 *((ix.w(j, k, c), -float(inst.nm[c])) for c in range(C))],
                 0.0, 0.0)
     # (8f) per-device memory
     for j in range(J):

@@ -130,7 +130,7 @@ def _phase2_lockstep(lanes: list[_Lane], tx, batch_width: int | None,
                                             ln.kk)
                 preps.append((i, c_arr, d_sel))
             items = [_phase2_item(ln, i, c_arr, d_sel)
-                     for ln, (i, c_arr, d_sel) in zip(chunk, preps)]
+                     for ln, (i, c_arr, d_sel) in zip(chunk, preps, strict=True)]
             kap0, kap1 = kernels.phase2_keys(tx, items, counters)
             for r, ln in enumerate(chunk):
                 i, c_arr, _ = preps[r]
@@ -177,12 +177,12 @@ def _relocate_screened(st: State, L: int, validate: bool,
         # the same order the per-type flatnonzero walk would visit.
         ii, ff = np.nonzero(st.x.reshape(inst.I, -1) > 1e-9)
         all_sources = [(int(i), int(f) // K, int(f) % K)
-                       for i, f in zip(ii, ff)]
+                       for i, f in zip(ii, ff, strict=True)]
         if track:
             sources = [s for s in all_sources if s not in clean]
             if sources:
                 verdicts = yield ("screen", obj, sources, rescan)
-                screen_fail = {s for s, ok in zip(sources, verdicts)
+                screen_fail = {s for s, ok in zip(sources, verdicts, strict=True)
                                if not ok}
         stats_bucket = None
         if "_screen_stats" in counters:
@@ -381,7 +381,7 @@ def _screen_batch(tx, requests: list[tuple], load: np.ndarray,
                                        counters)
         counters["screen_s"] = (counters.get("screen_s", 0.0)
                                 + time.perf_counter() - t0)
-        for (r, n), v in zip(src_req[lo:lo + chunk], alive):
+        for (r, n), v in zip(src_req[lo:lo + chunk], alive, strict=True):
             out[r][n] = bool(v)
     return out
 
@@ -409,7 +409,7 @@ def _improve_wave(wave: list[_Lane], offset: int, tx, L: int,
                     for idx, ln, gen, req in pending]
         verdicts = _screen_batch(tx, requests, load, counters)
         nxt = []
-        for (idx, ln, gen, _), v in zip(pending, verdicts):
+        for (idx, ln, gen, _), v in zip(pending, verdicts, strict=True):
             try:
                 req = gen.send(v)
                 nxt.append((idx, ln, gen, req))

@@ -59,7 +59,7 @@ def _phase2_keys_jit(m1_nm, psb_data, rho_d, m1_delay, m1_valid, ebf,
                      pc_flat, eps, Delta, Delta_T, i_idx, y, rr, E, D,
                      act_jk, act_cost, act_d, act_valid):
     R, JK = y.shape
-    rows = jnp.arange(R)[:, None]
+    rows = jnp.arange(R, dtype=jnp.int64)[:, None]
 
     def scat(base, vals):
         p = jnp.concatenate([base, jnp.zeros((R, 1), base.dtype)], axis=1)
@@ -137,7 +137,7 @@ def _screen_jit(m1_delay, m1_valid, m1_rental, m1_nm, ebf, lpx, psB_flat,
                 del_num, fthr):
     G, JK = z_lt.shape
     S = s_g.shape[0]
-    gr = jnp.arange(G)[:, None]
+    gr = jnp.arange(G, dtype=jnp.int64)[:, None]
 
     def scat(base, vals):
         p = jnp.concatenate([base, jnp.zeros((G, 1), base.dtype)], axis=1)
@@ -159,7 +159,7 @@ def _screen_jit(m1_delay, m1_valid, m1_rental, m1_nm, ebf, lpx, psB_flat,
     delta = dcost[s_g] + dyn[:, None] * ds
     cand = okr[s_g] & (delta < bound[:, None])
     candp = jnp.concatenate([cand, jnp.zeros((S, 1), bool)], axis=1)
-    cand = candp.at[jnp.arange(S), s_jk].set(False)[:, :JK]
+    cand = candp.at[jnp.arange(S, dtype=jnp.int64), s_jk].set(False)[:, :JK]
     si = g_i[s_g]
     ub = jnp.minimum(rr2[:, None], err_num[:, None] / ebf[si])
     ub = jnp.minimum(ub, del_num[:, None] / jnp.maximum(ds, 1e-12))

@@ -46,29 +46,35 @@ class XlaInstanceTensors:
         self.inst = inst
         self.JK = JK
         m1_delay = inst.m1_delay.reshape(I, JK)
+        f64, b8 = jnp.float64, jnp.bool_
         # --- shared by both kernels -----------------------------------
-        self.m1_delay = jnp.asarray(m1_delay)
-        self.m1_valid = jnp.asarray(inst.m1_feasible.reshape(I, JK))
-        self.ebf = jnp.asarray(inst.e_bar_floor_flat)
-        self.eps = jnp.asarray(inst.eps)
-        self.Delta = jnp.asarray(inst.Delta)
+        self.m1_delay = jnp.asarray(m1_delay, dtype=f64)
+        self.m1_valid = jnp.asarray(inst.m1_feasible.reshape(I, JK),
+                                    dtype=b8)
+        self.ebf = jnp.asarray(inst.e_bar_floor_flat, dtype=f64)
+        self.eps = jnp.asarray(inst.eps, dtype=f64)
+        self.Delta = jnp.asarray(inst.Delta, dtype=f64)
         self.Delta_T = float(inst.Delta_T)
         # --- phase-2 ranking (rank_keys_all's cost pieces) ------------
         # Cost term p_s * (B_j + data_gb_i), elementwise in the oracle's
         # own op order (add, then scale).
         B_jk = np.repeat(inst.B, K)
         self.psb_data = jnp.asarray(
-            inst.p_s * (B_jk[None, :] + inst.data_gb[:, None]))
+            inst.p_s * (B_jk[None, :] + inst.data_gb[:, None]), dtype=f64)
         # Routed-delay cost rho_i * d * 1e3 at the M1 winner (active
         # cells are overridden per call).
-        self.rho_d = jnp.asarray((inst.rho[:, None] * m1_delay) * 1e3)
-        self.m1_nm = jnp.asarray(inst.m1_nm.reshape(I, JK).astype(float))
-        self.pc_flat = jnp.asarray(np.tile(inst.p_c, J))
+        self.rho_d = jnp.asarray((inst.rho[:, None] * m1_delay) * 1e3,
+                                 dtype=f64)
+        self.m1_nm = jnp.asarray(inst.m1_nm.reshape(I, JK).astype(float),
+                                 dtype=f64)
+        self.pc_flat = jnp.asarray(np.tile(inst.p_c, J), dtype=f64)
         # --- relocate screen (DestCache row ingredients) --------------
-        self.m1_rental = jnp.asarray(inst.m1_rental.reshape(I, JK))
-        self.lpx = jnp.asarray(inst.load_per_x_flat)
-        self.psB_flat = jnp.asarray(np.repeat(inst.p_s_B, K))
-        self.comp_flat = jnp.asarray(np.tile(inst.comp_cap_coef, J))
+        self.m1_rental = jnp.asarray(inst.m1_rental.reshape(I, JK),
+                                     dtype=f64)
+        self.lpx = jnp.asarray(inst.load_per_x_flat, dtype=f64)
+        self.psB_flat = jnp.asarray(np.repeat(inst.p_s_B, K), dtype=f64)
+        self.comp_flat = jnp.asarray(np.tile(inst.comp_cap_coef, J),
+                                     dtype=f64)
 
 
 def tensors_for(inst: Instance) -> XlaInstanceTensors:

@@ -150,9 +150,9 @@ def _scan_hybrid(params, cfg, x, cache, pos0, window, body_fn):
         # E mamba layers (unrolled within the super-block: E is small).
         new_m_caches = []
         for e in range(E):
-            lp_e = jax.tree.map(lambda a: a[e], lp_group)
+            lp_e = jax.tree.map(lambda a: a[e], lp_group)  # noqa: B023
             c_e = (None if mamba_cache_group is None
-                   else jax.tree.map(lambda a: a[e], mamba_cache_group))
+                   else jax.tree.map(lambda a: a[e], mamba_cache_group))  # noqa: B023
             h, nc = _layer_body(lp_e, cfg, h, c_e, pos0, window)
             new_m_caches.append(nc)
         # shared attention block (single weight set)
@@ -188,9 +188,9 @@ def _scan_hybrid(params, cfg, x, cache, pos0, window, body_fn):
     if tail:
         new_tail = []
         for e in range(tail):
-            lp_e = jax.tree.map(lambda a: a[e], params["tail"])
+            lp_e = jax.tree.map(lambda a: a[e], params["tail"])  # noqa: B023
             c_e = (None if cache is None
-                   else jax.tree.map(lambda a: a[e], cache["tail"]))
+                   else jax.tree.map(lambda a: a[e], cache["tail"]))  # noqa: B023
             h, nc = _layer_body(lp_e, cfg, h, c_e, pos0, window)
             new_tail.append(nc)
         if cache is not None:

@@ -151,7 +151,7 @@ def attention_block_params(rng, cfg: ModelConfig, stacked: int | None = None):
         wq=(d, H * hd), wk=(d, KV * hd), wv=(d, KV * hd), wo=(H * hd, d))
     keys = jax.random.split(rng, len(shapes) + 3)
     out = {}
-    for (name, shp), key in zip(shapes.items(), keys):
+    for (name, shp), key in zip(shapes.items(), keys, strict=False):
         full = shp if stacked is None else (stacked,) + shp
         out[name] = (jax.random.normal(key, full, jnp.float32)
                      * (shp[0] ** -0.5)).astype(cfg.jdtype)

@@ -57,7 +57,7 @@ class Engine:
             toks[b, -len(r.prompt):] = r.prompt      # left-pad
         logits, cache = self._prefill(self.params, jnp.asarray(toks))
         step_tokens = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
-        for r, t in zip(requests, np.asarray(step_tokens)):
+        for r, t in zip(requests, np.asarray(step_tokens), strict=True):
             r.output.append(int(t))
             r.first_token_s = time.perf_counter() - t_start
         n_new = max(r.max_new_tokens for r in requests)
@@ -68,7 +68,7 @@ class Engine:
                                          jnp.int32(pos))
             step_tokens = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
             pos += 1
-            for r, t in zip(requests, np.asarray(step_tokens)):
+            for r, t in zip(requests, np.asarray(step_tokens), strict=True):
                 if len(r.output) < r.max_new_tokens:
                     r.output.append(int(t))
         now = time.perf_counter() - t_start

@@ -1,0 +1,33 @@
+"""RPR201/202/203/204: nondeterminism in an engine path."""
+import os
+import random
+import time
+
+import numpy as np
+
+
+def unseeded(n: int):
+    return np.random.rand(n)                # RPR201: legacy global API
+
+
+def stdlib_random() -> float:
+    return random.random()                  # RPR202 (import is too)
+
+
+def set_order(members: set) -> list:
+    return list(members)                    # RPR203: arbitrary order out
+
+
+def set_loop() -> float:
+    total = 0.0
+    for x in {1.0, 2.0}:                    # RPR203: bare set iteration
+        total = total / 2 + x
+    return total
+
+
+def wallclock() -> float:
+    return time.time()                      # RPR204: wall-clock read
+
+
+def env_knob() -> str:
+    return os.environ["REPRO_MODE"]         # RPR204: environment read

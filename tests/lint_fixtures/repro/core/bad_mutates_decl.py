@@ -1,0 +1,14 @@
+"""RPR102/RPR103: @mutates declaration out of sync with the body."""
+from repro.core.contracts import mutates
+from repro.core.mechanisms import State
+
+
+@mutates("spend")
+def undeclared_write(st: State) -> None:
+    st.spend += 1.0
+    st.r_rem[0] = 0.0           # RPR102: written but not declared
+
+
+@mutates("spend", "kv_tok")
+def unused_declaration(st: State) -> None:
+    st.spend += 1.0             # RPR103: 'kv_tok' declared, never written

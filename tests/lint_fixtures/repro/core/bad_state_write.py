@@ -1,0 +1,13 @@
+"""RPR101: unsanctioned State field write outside a @mutates mutator."""
+from repro.core.mechanisms import State
+
+
+def sneaky_discount(st: State, j: int, k: int) -> None:
+    st.spend -= 1.0             # RPR101: direct write, no @mutates
+    st.q[j, k] = 0.0            # RPR101: subscript store
+    st.uncovered.add(0)         # RPR101: mutating method call
+
+
+def local_constructor(inst) -> None:
+    st = State.fresh(inst)
+    st.cfg[0, 0] = 3            # RPR101: tracked via constructor binding

@@ -1,0 +1,21 @@
+"""Clean twin of bad_determinism: seeded RNG, sorted sets, perf timing."""
+import time
+
+import numpy as np
+
+
+def seeded(n: int, seed: int):
+    rng = np.random.default_rng(seed)       # explicit seeded Generator
+    return rng.random(n)
+
+
+def set_order(members: set) -> list:
+    return sorted(members)                  # order-insensitive consumer
+
+
+def set_reductions(members: set) -> float:
+    return float(sum(members)) + float(len(members)) + float(max(members))
+
+
+def timing() -> float:
+    return time.perf_counter()              # reporting clock: legal

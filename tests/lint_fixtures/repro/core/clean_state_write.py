@@ -1,0 +1,18 @@
+"""Clean twin of bad_state_write: declared mutators and read-only use."""
+from repro.core.contracts import mutates
+from repro.core.mechanisms import State, commit
+
+
+@mutates("spend", "q")
+def sanctioned(st: State, j: int, k: int) -> None:
+    st.spend -= 1.0
+    st.q[j, k] = 0.0
+
+
+def read_only(st: State) -> float:
+    covered = len(st.uncovered) == 0        # reads are always fine
+    return float(st.spend) + float(covered)
+
+
+def routed(st: State, i: int, j: int, k: int) -> None:
+    commit(st, i, j, k, 0, 0.5)             # mutation via the mutator

@@ -1,0 +1,6 @@
+"""Bare suppression fixture: no reason -> RPR002 AND the finding stays."""
+
+
+def masked_fill(members: set, flags) -> None:
+    # repro-lint: ignore[RPR203]
+    flags[list(members)] = True

@@ -1,0 +1,10 @@
+"""Suppression round-trip fixture: a justified ignore silences RPR203."""
+
+
+def masked_fill(members: set, flags) -> None:
+    # repro-lint: ignore[RPR203] -- boolean-mask fill is order-free.
+    flags[list(members)] = True
+
+
+def same_line(members: set) -> list:
+    return list(members)  # repro-lint: ignore[RPR203] -- sorted downstream.

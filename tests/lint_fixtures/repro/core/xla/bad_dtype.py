@@ -1,0 +1,24 @@
+"""RPR301/302/303: f32 leaks in the f64 xla engine tier."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def implicit_dtype(n: int):
+    grid = jnp.zeros((n, n))                # RPR301: implicit f32
+    idx = jnp.arange(n)                     # RPR301: implicit dtype
+    return grid, idx
+
+
+def narrowing(x):
+    lossy = x.astype(jnp.float32)           # RPR302: f32 narrowing
+    return lossy + np.float32(1.5)          # RPR302: np.float32 cast
+
+
+@jax.jit
+def _score(base, scale):
+    return base * scale
+
+
+def weak_literal(base):
+    return _score(base, 0.5)                # RPR303: weak float literal

@@ -1,0 +1,24 @@
+"""Clean twin of bad_dtype: pinned dtypes everywhere."""
+import jax
+import jax.numpy as jnp
+
+
+def explicit_dtype(n: int, base):
+    grid = jnp.zeros((n, n), dtype=jnp.float64)
+    mirror = jnp.zeros((n, n), base.dtype)          # positional slot
+    idx = jnp.arange(n, dtype=jnp.int64)
+    like = jnp.zeros_like(base)                     # inherits: exempt
+    return grid, mirror, idx, like
+
+
+def widen(x):
+    return x.astype(jnp.float64)                    # widening is fine
+
+
+@jax.jit
+def _score(base, scale):
+    return base * scale
+
+
+def typed_scalar(base):
+    return _score(base, jnp.float64(0.5))           # explicit dtype in

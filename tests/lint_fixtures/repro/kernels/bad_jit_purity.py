@@ -1,0 +1,32 @@
+"""RPR401/402/403: Python control flow on traced values."""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def branch_on_tracer(x, thresh):
+    if x.sum() > thresh:                    # RPR401: Python if on tracer
+        return x * 2.0
+    return x
+
+
+@jax.jit
+def host_escape(x):
+    return float(x.sum()) + x.mean().item()     # RPR402 twice
+
+
+@jax.jit
+def data_dependent_loop(x, n):
+    acc = jnp.zeros_like(x)
+    for _ in range(n):                      # RPR403: traced loop bound
+        acc = acc + x
+    return acc
+
+
+@functools.partial(jax.jit, static_argnames=("flip",))
+def mixed(x, flip):
+    y = jnp.where(x > 0, x, -x)
+    sign = 1.0 if x.max() > 0 else -1.0     # RPR401: IfExp on tracer
+    return y * sign if flip else y

@@ -43,8 +43,8 @@ def test_param_specs_divisibility():
         flat_shapes = jax.tree.leaves(shapes)
         flat_specs = jax.tree.leaves(specs,
                                      is_leaf=lambda x: isinstance(x, P))
-        for sds, spec in zip(flat_shapes, flat_specs):
-            for dim, axes in zip(sds.shape, tuple(spec)):
+        for sds, spec in zip(flat_shapes, flat_specs, strict=True):
+            for dim, axes in zip(sds.shape, tuple(spec), strict=True):
                 if axes is None:
                     continue
                 assert dim % shd.mesh_axis_size(mesh, axes) == 0

@@ -51,7 +51,7 @@ def sources_of(st: State):
 
 
 def _assert_states_equal(snap_a, snap_b):
-    for a, b in zip(snap_a, snap_b):
+    for a, b in zip(snap_a, snap_b, strict=True):
         if isinstance(a, (set, float)):
             assert a == b
         else:

@@ -1,0 +1,290 @@
+"""Tests for the repro.analysis.lint invariant-checker suite.
+
+Fixture files under tests/lint_fixtures/ mirror the src/repro layout so
+path-scoped checkers (determinism in core/planner/serving, dtype in
+core/xla + kernels, jit purity in core/xla + kernels) fire naturally.
+Every bad fixture has a clean twin proving the rule does not over-fire.
+"""
+from __future__ import annotations
+
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+from repro.analysis.lint import (all_rules, lint_file, lint_source,
+                                 run_paths, write_baseline)
+from repro.core.contracts import mutates
+
+REPO = Path(__file__).resolve().parent.parent
+FIXTURES = REPO / "tests" / "lint_fixtures"
+SRC = REPO / "src"
+
+
+def codes(report) -> list[str]:
+    return [d.rule for d in report.diagnostics]
+
+
+def lint_fixture(rel: str):
+    return lint_file(FIXTURES / rel)
+
+
+# ---------------------------------------------------------------- rules
+
+def test_rule_table_is_wellformed_and_unique():
+    rules = all_rules()
+    assert len({r.code for r in rules}) == len(rules)
+    for r in rules:
+        assert r.code.startswith("RPR")
+        assert r.summary
+
+
+# ------------------------------------------------- state mutation (1xx)
+
+def test_unsanctioned_state_write_is_caught():
+    # ISSUE acceptance demo: a raw write to a State field is flagged.
+    got = codes(lint_fixture("repro/core/bad_state_write.py"))
+    assert got.count("RPR101") == 4
+    assert set(got) == {"RPR101"}
+
+
+def test_sanctioned_mutator_is_clean():
+    assert codes(lint_fixture("repro/core/clean_state_write.py")) == []
+
+
+def test_mutates_declaration_mismatches():
+    got = codes(lint_fixture("repro/core/bad_mutates_decl.py"))
+    assert "RPR102" in got      # wrote a field it never declared
+    assert "RPR103" in got      # declared a field it never writes
+
+
+def test_inline_state_write_snippet():
+    # Same contract exercised without a fixture file: the posix path is
+    # what routes the source to the state-mutation checker.
+    src = (
+        "from repro.core.state import State\n"
+        "def leak(st: State) -> None:\n"
+        "    st.spend += 1.0\n"
+    )
+    rep = lint_source(src, display="snippet.py",
+                      posix="x/repro/core/snippet.py")
+    assert codes(rep) == ["RPR101"]
+
+
+# ----------------------------------------------------- determinism (2xx)
+
+def test_determinism_rules_fire():
+    got = codes(lint_fixture("repro/core/bad_determinism.py"))
+    # ISSUE acceptance demo: unseeded legacy RNG is flagged.
+    assert "RPR201" in got
+    assert got.count("RPR202") == 2     # import + call
+    assert got.count("RPR203") == 2     # list(set) + bare for-over-set
+    assert got.count("RPR204") == 2     # time.time + os.environ
+
+
+def test_determinism_clean_twin():
+    assert codes(lint_fixture("repro/core/clean_determinism.py")) == []
+
+
+def test_determinism_is_path_scoped():
+    # The same source outside core/planner/serving is nobody's business.
+    bad = (FIXTURES / "repro/core/bad_determinism.py").read_text()
+    rep = lint_source(bad, display="free.py", posix="x/repro/models/free.py")
+    assert codes(rep) == []
+
+
+# ------------------------------------------------------------ dtype (3xx)
+
+def test_dtype_rules_fire():
+    got = codes(lint_fixture("repro/core/xla/bad_dtype.py"))
+    # ISSUE acceptance demo: implicit-dtype jnp.zeros is flagged.
+    assert got.count("RPR301") == 2     # zeros + arange
+    assert got.count("RPR302") == 2     # astype(f32) + np.float32 cast
+    assert got.count("RPR303") == 1     # weak literal into jitted fn
+
+
+def test_dtype_clean_twin():
+    assert codes(lint_fixture("repro/core/xla/clean_dtype.py")) == []
+
+
+def test_f32_narrowing_allowed_in_kernels():
+    # kernels/ compute in f32 on the MXU by design: RPR302 is scoped to
+    # core/xla only, RPR301 (implicit dtype) still applies everywhere.
+    src = "import jax.numpy as jnp\n\ndef f(x):\n    return x.astype(jnp.float32)\n"
+    rep = lint_source(src, display="k.py", posix="x/repro/kernels/k.py")
+    assert codes(rep) == []
+
+
+# ------------------------------------------------------- jit purity (4xx)
+
+def test_jit_purity_rules_fire():
+    got = codes(lint_fixture("repro/kernels/bad_jit_purity.py"))
+    # ISSUE acceptance demo: Python `if` on a traced value is flagged.
+    assert got.count("RPR401") == 2     # if + conditional expression
+    assert got.count("RPR402") == 2     # float(...) + .item()
+    assert got.count("RPR403") == 1     # traced range() bound
+    assert len(got) == 5
+
+
+def test_jit_purity_clean_twin():
+    # static kw-only pallas params, shape-derived bounds, jnp.where,
+    # static_argnames branching: none of it may fire.
+    assert codes(lint_fixture("repro/kernels/clean_jit_purity.py")) == []
+
+
+def test_unjitted_function_is_not_scanned():
+    src = (
+        "def host_side(x, n):\n"
+        "    if x > 0:\n"
+        "        return float(x)\n"
+        "    return [i for i in range(n)]\n"
+    )
+    rep = lint_source(src, display="h.py", posix="x/repro/kernels/h.py")
+    assert codes(rep) == []
+
+
+# ----------------------------------------------------------- suppressions
+
+def test_valid_suppressions_silence_and_count():
+    rep = lint_fixture("repro/core/suppressed_ok.py")
+    assert codes(rep) == []
+    assert len(rep.suppressed) == 2     # standalone + same-line forms
+    assert all(s.reason for _, s in rep.suppressed)
+
+
+def test_bare_suppression_rejected_and_finding_kept():
+    rep = lint_fixture("repro/core/suppressed_bare.py")
+    got = codes(rep)
+    assert "RPR002" in got      # the bare marker itself
+    assert "RPR203" in got      # ...and it does NOT silence the finding
+    assert rep.suppressed == []
+
+
+def test_unknown_suppression_code_flagged():
+    src = (
+        "def f(s: set):\n"
+        "    # repro-lint: ignore[RPR999] -- no such rule\n"
+        "    return list(s)\n"
+    )
+    rep = lint_source(src, display="u.py", posix="x/repro/core/u.py")
+    got = codes(rep)
+    assert "RPR003" in got
+    assert "RPR203" in got      # unknown code silences nothing
+
+
+def test_meta_rules_are_unsuppressible():
+    src = (
+        "def f(s: set):\n"
+        "    # repro-lint: ignore[RPR002, RPR203] -- trying to self-silence\n"
+        "    # repro-lint: ignore[RPR203]\n"
+        "    return list(s)\n"
+    )
+    rep = lint_source(src, display="m.py", posix="x/repro/core/m.py")
+    assert "RPR002" in codes(rep)
+
+
+def test_syntax_error_reported_as_rpr000():
+    rep = lint_source("def broken(:\n", display="b.py",
+                      posix="x/repro/core/b.py")
+    assert codes(rep) == ["RPR000"]
+
+
+# ---------------------------------------------------------------- baseline
+
+def test_baseline_roundtrip(tmp_path):
+    bad = FIXTURES / "repro/core/bad_determinism.py"
+    first = run_paths([bad])
+    assert first.exit_code == 1
+    n = len(first.diagnostics)
+
+    bl = tmp_path / "baseline.json"
+    write_baseline(first, bl)
+    second = run_paths([bad], baseline=bl)
+    assert second.exit_code == 0
+    assert second.baselined_count == n
+    assert second.diagnostics == []
+
+
+def test_baseline_expires_when_line_changes(tmp_path):
+    f = tmp_path / "repro" / "core" / "drift.py"
+    f.parent.mkdir(parents=True)
+    f.write_text("import numpy as np\n\ndef f():\n    return np.random.rand()\n")
+    bl = tmp_path / "baseline.json"
+    write_baseline(run_paths([f]), bl)
+    # Edit the offending line: the fingerprint must stop matching.
+    f.write_text("import numpy as np\n\ndef f():\n    return np.random.rand(3)\n")
+    again = run_paths([f], baseline=bl)
+    assert again.exit_code == 1
+
+
+# --------------------------------------------------------- committed tree
+
+def test_committed_src_tree_is_lint_clean():
+    """Regression guard: the shipped src/ tree must stay at zero
+    unsuppressed diagnostics (the CI invariant-lint job enforces the
+    same thing; this keeps it honest locally)."""
+    result = run_paths([SRC])
+    assert result.exit_code == 0, "\n".join(
+        d.format() for d in result.diagnostics)
+    assert result.files_checked > 50
+
+
+# --------------------------------------------------------------------- CLI
+
+def run_cli(*argv: str) -> subprocess.CompletedProcess:
+    return subprocess.run(
+        [sys.executable, "-m", "repro.analysis.lint", *argv],
+        capture_output=True, text=True, cwd=REPO,
+        env={"PYTHONPATH": str(SRC), "PATH": "/usr/bin:/bin"})
+
+
+def test_cli_exit_codes():
+    ok = run_cli("src")
+    assert ok.returncode == 0, ok.stderr
+    bad = run_cli(str(FIXTURES / "repro/core/bad_state_write.py"))
+    assert bad.returncode == 1
+    assert "RPR101" in bad.stdout
+
+
+def test_cli_select_filters_rules():
+    p = str(FIXTURES / "repro/core/bad_determinism.py")
+    only_204 = run_cli(p, "--select", "RPR204")
+    assert only_204.returncode == 1
+    assert "RPR204" in only_204.stdout
+    assert "RPR201" not in only_204.stdout
+    none = run_cli(p, "--select", "RPR3")
+    assert none.returncode == 0
+
+
+def test_cli_list_rules():
+    out = run_cli("--list-rules")
+    assert out.returncode == 0
+    for code in ("RPR101", "RPR201", "RPR301", "RPR401"):
+        assert code in out.stdout
+
+
+def test_cli_summary_json(tmp_path):
+    dest = tmp_path / "summary.json"
+    p = str(FIXTURES / "repro/core/bad_determinism.py")
+    run_cli(p, "--summary-json", str(dest))
+    data = json.loads(dest.read_text())
+    assert data["diagnostics"] > 0
+    assert data["by_rule"]["RPR201"] == 1
+
+
+# -------------------------------------------------------------- decorator
+
+def test_mutates_decorator_records_write_set():
+    @mutates("spend", "q")
+    def mutator(st):
+        pass
+    assert mutator.__mutates__ == frozenset({"spend", "q"})
+
+
+def test_mutates_decorator_rejects_bad_fields():
+    with pytest.raises(ValueError):
+        mutates()
+    with pytest.raises(ValueError):
+        mutates("not an identifier")

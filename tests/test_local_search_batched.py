@@ -80,7 +80,7 @@ def assert_scores_match_probing(state: State, i: int, j: int, k: int):
             assert abs(ms.obj_after[j2, k2] - obj) \
                 <= 1e-9 * max(1.0, abs(obj)), (i, j, k, j2, k2)
     # the scan must leave the state untouched
-    for a, b in zip(before, state_snapshot(state)):
+    for a, b in zip(before, state_snapshot(state), strict=True):
         if isinstance(a, (set, float)):
             assert a == b
         else:

@@ -56,7 +56,7 @@ def _assert_exact_restore(before, st):
     after = _fields(st)
     names = ["x", "y", "q", "cfg", "z", "r_rem", "E_used", "D_used",
              "spend", "kv_tok", "load", "stor_used", "uncovered"]
-    for name, a, b in zip(names, before, after):
+    for name, a, b in zip(names, before, after, strict=True):
         if isinstance(a, np.ndarray):
             assert np.array_equal(a, b), f"{name} not restored exactly"
         else:

@@ -39,8 +39,8 @@ def test_stage2_lp_matches_reference(name, inst, deploy):
     """Base + perturbed scenarios, default and strict caps, both admission
     modes: identical capped flags, objectives within 1e-9."""
     rng = np.random.default_rng(11)
-    scens = [inst] + [inst.perturbed(rng, d_infl=0.15, e_infl=0.10)
-                      for _ in range(3)]
+    scens = [inst, *(inst.perturbed(rng, d_infl=0.15, e_infl=0.10)
+                     for _ in range(3))]
     strict = np.full(inst.I, 0.02)
     for si, scen in enumerate(scens):
         for cap, any_dep in [(None, False), (strict, False),
