@@ -2,9 +2,13 @@
 # GPU provisioning, (TP, PP) parallelism configuration, and workload routing
 # for SLO-constrained LLM inference — exact MILP (P_DM) plus the
 # constraint-aware GH / AGH heuristics built on mechanisms M1–M3.
-from .agh import agh
+from .agh import agh, agh_repair
 from .baselines import dvr, hf, lpr
 from .evaluate import EvalResult, evaluate
+from .faults import (CapacityShock, FaultSchedule, PriceSpike, Recovery,
+                     SpotRevocation, TierOutage, apply_faults,
+                     diurnal_outages, evict_unavailable, lost_pairs,
+                     poisson_revocations, with_spot_tiers)
 from .gh import gh, greedy_heuristic
 from .instance import (Instance, ScenarioBatch, default_instance,
                        random_instance)
@@ -22,9 +26,13 @@ from .solution import (Solution, cost_terms, feasibility, is_feasible,
 from .stage2 import Stage2System, stage2_cost, stage2_lp
 
 __all__ = [
-    "agh", "dvr", "hf", "lpr", "EvalResult", "evaluate", "gh",
+    "agh", "agh_repair", "dvr", "hf", "lpr", "EvalResult", "evaluate", "gh",
     "greedy_heuristic", "Instance", "ScenarioBatch", "default_instance",
     "random_instance",
+    "CapacityShock", "FaultSchedule", "PriceSpike", "Recovery",
+    "SpotRevocation", "TierOutage", "apply_faults", "diurnal_outages",
+    "evict_unavailable", "lost_pairs", "poisson_revocations",
+    "with_spot_tiers",
     "MoveScores", "State", "m1_select", "m3_upgrade", "max_commit",
     "max_commit_batch", "rank_keys_all", "score_moves_batch",
     "solution_from_state", "state_objective",

@@ -603,8 +603,17 @@ def _warm_start_state(inst: Instance, incumbent: Solution, L: int,
     is what the incumbent already paid for), then run the configured
     improvement engine to a fixed point.  Replaces a full multi-start
     ordering at roughly one ordering's cost while typically starting at a
-    much better objective than any cold construction."""
+    much better objective than any cold construction.
+
+    Under availability caps the incumbent may sit on capacity this
+    instance no longer has (supply drift: revocations, outages) — those
+    pairs are evicted first, as in `agh_repair`, so the seed is legal
+    before any demand is routed onto it."""
     st = deployment_state(inst, incumbent)
+    if inst.avail_gpus is not None:
+        from .faults import lost_pairs
+        for (j, k) in lost_pairs(inst, st.y):
+            deactivate_pair(st, j, k)
     _phase2(st, np.argsort(-inst.lam))
     if batched:
         _improve_batched(st, L, validate, incremental=incremental,
@@ -613,6 +622,55 @@ def _warm_start_state(inst: Instance, incumbent: Solution, L: int,
         _relocate(st, L, ranked, validate)
         _consolidate(st, validate)
     return st
+
+
+def agh_repair(inst: Instance, incumbent: Solution, L: int = 1,
+               local_search: str = "batched", validate: bool = False,
+               stats: dict | None = None) -> Solution:
+    """One-pass warm *repair* solve for a supply-faulted instance.
+
+    The sub-second replan path behind `PlanSession.repair()`: no
+    multi-start, no Phase-1 coverage search — the incumbent's structure
+    is what the fleet is already running, so repair (1) seeds the state
+    from the incumbent's deployment with routing cleared
+    (`deployment_state` — the drain: displaced traffic is simply demand
+    to re-route), (2) evicts every pair that no longer fits its tier's
+    availability cap via `deactivate_pair` (rental refunded, admissions
+    dropped), (3) re-routes ALL demand over the surviving deployment
+    with one GH Phase-2 pass — the commit machinery's availability
+    guards keep fresh activations inside the reduced caps — and (4)
+    polishes with the configured improvement engine capped at `L`
+    passes (default 1: latency beats the last percent of objective
+    mid-incident).
+
+    Like `agh`, the result is asserted feasible for the hard constraint
+    system (zeta excluded — the unmet cap is the first rung of the
+    planner's degradation ladder, reported there, never silently
+    violated)."""
+    t0 = time.perf_counter()
+    from .faults import lost_pairs
+    batched = local_search != "reference"
+    incremental = local_search != "batched-rescan"
+    st = deployment_state(inst, incumbent)
+    evicted = lost_pairs(inst, st.y)
+    for (j, k) in evicted:
+        deactivate_pair(st, j, k)
+    _phase2(st, np.argsort(-inst.lam))
+    if batched:
+        _improve_batched(st, L, validate, incremental=incremental,
+                         stats=stats)
+    else:
+        _relocate(st, L, _rank_inactive_targets(inst), validate)
+        _consolidate(st, validate)
+    best = solution_from_state(inst, st)
+    if stats is not None:
+        stats.update(repair=True, evicted=[[j, k] for (j, k) in evicted],
+                     repair_objective=state_objective(st))
+    assert is_feasible(inst, best, enforce_zeta=False), \
+        "repair produced an infeasible plan (incremental-state bug)"
+    best.runtime_s = time.perf_counter() - t0
+    best.method = "AGH-repair"
+    return best
 
 
 # Fork-shared work description for the multi-start pool: set in the parent

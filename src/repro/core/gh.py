@@ -63,6 +63,12 @@ def _phase1(st: State) -> None:
         worst_c = np.take_along_axis(cfg_eff, first_i[None], axis=0)[0]
         cost = inst.Delta_T * inst.p_c[None, :] * worst_nm   # eq. (14)
         valid &= st.spend + cost <= cap
+        if inst.avail_gpus is not None:
+            # Phase 1 activates pairs directly (no max_commit): enforce the
+            # shared tier availability cap on the candidate's device count.
+            tier_used = st.y.sum(axis=0)
+            valid &= (tier_used[None, :] + worst_nm
+                      <= inst.avail_gpus[None, :] + 1e-9)
         if not valid.any():
             break
         score = np.full((J, K), -np.inf)

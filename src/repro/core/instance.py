@@ -92,6 +92,13 @@ class Instance:
     phase1_beta: float = 0.8        # GH Phase-1 budget fraction
     tau: np.ndarray | None = None   # [I] task-specific overhead for d_comp
     kv_applicable: np.ndarray | None = None  # [J] bool; False for SSM-state models
+    # --- supply-side availability (core/faults.py) -----------------------
+    # All three default to None, which means "the unbounded on-demand fleet
+    # of the paper" — every solver/tensor path is bit-identical to the
+    # pre-fault code until a cap is set.
+    avail_gpus: np.ndarray | None = None   # [K] max rentable devices per tier
+    spot: np.ndarray | None = None         # [K] bool: spot-priced (revocable)
+    revoke_rate: np.ndarray | None = None  # [K] Poisson revocations / hour
 
     # ------------------------------------------------------------------
     # Derived quantities (computed once in __post_init__).
@@ -169,6 +176,16 @@ class Instance:
         # is the scalar discard condition, so keep `<=` here).
         per_dev = self.B_eff[:, :, None] / self.nm[None, None, :]   # [J,K,C]
         self.mem_ok = per_dev <= self.C_gpu[None, :, None]          # [J,K,C]
+        if self.avail_gpus is not None:
+            # Tier availability caps (core/faults.py): a config whose device
+            # count alone exceeds the tier's cap can never be deployed there,
+            # so it is statically infeasible — masking it here propagates
+            # through cfg_m1 / m1_nm / cover_ok / m1_delay below.  The
+            # cross-pair (shared-cap) part of the constraint is dynamic and
+            # enforced by the `max_commit*` / `m3_upgrade` / Phase-1 guards.
+            self.avail_gpus = np.asarray(self.avail_gpus, float)
+            self.mem_ok = self.mem_ok & (
+                self.nm[None, None, :] <= self.avail_gpus[None, :, None])
         # Joint M1 feasibility per candidate: memory AND delay SLO.
         feas = self.mem_ok[None, :, :, :] & (
             self.D_cfg <= self.Delta[:, None, None, None])          # [I,J,K,C]

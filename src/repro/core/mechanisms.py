@@ -113,6 +113,11 @@ def m3_upgrade(st: State, i: int, j: int, k: int) -> int | None:
             & (inst.D_cfg[i, j, k] <= inst.Delta[i])
             & (st.spend + inst.Delta_T * inst.p_c[k] * (nm - y_cur)
                <= inst.delta))
+    if inst.avail_gpus is not None:
+        # Shared tier cap: the upgrade swaps this pair's y_cur for nm,
+        # so the tier's total usage must stay within availability.
+        used_k = float(st.y[:, k].sum())
+        mask &= used_k - y_cur + nm <= inst.avail_gpus[k] + 1e-9
     if not mask.any():
         return None
     c_old = int(st.cfg[j, k])
@@ -256,6 +261,9 @@ def max_commit(st: State, i: int, j: int, k: int, c: int,
         cap = min(cap, (inst.C_s - stor_i - new_weight) / per_x)
     # budget (8c): incremental rental + data storage per unit x.
     inc_gpus = max(0.0, inst.nm[c] - st.y[j, k])
+    if (inst.avail_gpus is not None and inc_gpus > 0.0
+            and st.y[:, k].sum() + inc_gpus > inst.avail_gpus[k] + 1e-9):
+        return 0.0   # tier availability cap: the extra devices don't exist
     fixed = inst.Delta_T * (inst.p_c[k] * inc_gpus
                             + (inst.p_s * inst.B[j] if st.z[i, j, k] < 0.5 else 0.0))
     per_x = inst.budget_per_x[i]
@@ -334,6 +342,11 @@ def max_commit_batch(st: State, i: int, c_arr: np.ndarray,
                              / inst.data_gb[i])
         # budget (8c)
         inc_gpus = np.maximum(0.0, nm - st.y)
+        if inst.avail_gpus is not None:
+            # tier availability: extra devices beyond the cap don't exist
+            tier_used = st.y.sum(axis=0)
+            dead |= (inc_gpus > 0) & (tier_used[None, :] + inc_gpus
+                                      > inst.avail_gpus[None, :] + 1e-9)
         fixed = inst.Delta_T * (inst.p_c[None, :] * inc_gpus
                                 + np.where(zm, inst.p_s_B[:, None], 0.0))
         dead |= spend + fixed > inst.delta
@@ -407,6 +420,10 @@ def max_commit_cells(st: State, i: int, cells: np.ndarray,
                              / inst.data_gb[i])
         # budget (8c)
         inc_gpus = np.maximum(0.0, nm - y)
+        if inst.avail_gpus is not None:
+            tier_used = st.y.sum(axis=0)
+            dead |= (inc_gpus > 0) & (tier_used[kk] + inc_gpus
+                                      > inst.avail_gpus[kk] + 1e-9)
         fixed = inst.Delta_T * (inst.p_c[kk] * inc_gpus
                                 + np.where(zm, inst.p_s_B[jj], 0.0))
         dead |= spend + fixed > inst.delta

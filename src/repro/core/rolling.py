@@ -30,10 +30,12 @@ count for the same demand profile (pinned by tests/test_rolling.py).
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Callable, Sequence
 
 import numpy as np
 
+from .faults import FaultSchedule, apply_faults, evict_unavailable
 from .instance import Instance, ScenarioBatch
 from .solution import Solution, objective, provisioning_cost
 from .stage2 import Stage2System, stage2_cost, stage2_lp
@@ -50,6 +52,12 @@ class RollingResult:
     violation_rate: float
     per_window_cost: np.ndarray
     replans: int = 0
+    # Supply-fault replay extensions (populated only when a FaultSchedule
+    # is passed to `rolling`; defaults keep the base path's result shape).
+    fault_replans: int = 0                   # event-driven re-solves
+    evictions: int = 0                       # pairs lost to capacity
+    repair_wall_s: tuple = ()                # per-event re-solve wall (s)
+    degradation_levels: tuple = ()           # repair ladder level per event
 
 
 def _ewma_forecasts(lam_path: np.ndarray, alpha: float) -> np.ndarray:
@@ -80,7 +88,9 @@ def rolling(inst0: Instance, lam_path: np.ndarray,
             forecast_ewma: float = 0.4,
             static_forecast: str = "first",
             window_h: float | None = None,
-            batched: bool = True) -> RollingResult:
+            batched: bool = True,
+            faults: FaultSchedule | None = None,
+            fault_response: str = "repair") -> RollingResult:
     """Replay `lam_path` ([T, I] arrivals).  If `replan_every` is None the
     Stage-1 plan is held fixed (static); otherwise the planner re-runs
     every `replan_every` windows on an EWMA forecast with keep-best.
@@ -92,7 +102,22 @@ def rolling(inst0: Instance, lam_path: np.ndarray,
     day-average (the paper's protocol for the diurnal trace replay).
     window_h: hours per window; defaults to 24/T (a one-day path).  Pass it
     explicitly for multi-day replays, where T spans more than 24 h.
+
+    `faults` injects a supply-side `FaultSchedule` (core/faults.py): every
+    supply change point triggers an EVENT-DRIVEN re-solve in addition to
+    the `replan_every` schedule, and each window is operated on the
+    faulted effective instance (pairs on lost capacity are evicted from
+    the operated deployment).  `fault_response` picks the reaction:
+    ``"repair"`` (warm `PlanSession.repair` when `planner` is a session,
+    else a planner re-solve), ``"cold"`` (full planner re-solve), or
+    ``"static"`` (no reaction — the frozen placement rides through the
+    fault, the degradation baseline).  With ``faults=None`` this function
+    is byte-identical to the pre-fault fast path.
     """
+    if faults is not None and not faults.is_empty:
+        return _rolling_faulted(inst0, lam_path, planner, replan_every,
+                                forecast_ewma, static_forecast, window_h,
+                                faults, fault_response)
     session = planner if hasattr(planner, "replan") else None
     planner = _as_planner(planner)
     lam_path = np.asarray(lam_path, float)
@@ -160,6 +185,125 @@ def rolling(inst0: Instance, lam_path: np.ndarray,
                          per_window_cost=costs, replans=replans)
 
 
+def _rolling_faulted(inst0: Instance, lam_path: np.ndarray, planner_obj,
+                     replan_every: int | None, forecast_ewma: float,
+                     static_forecast: str, window_h: float | None,
+                     faults: FaultSchedule,
+                     fault_response: str) -> RollingResult:
+    """The supply-faulted replay: `rolling` with a `FaultSchedule`.
+
+    Segments break at every supply change point (event-driven replans)
+    AND at every adopted scheduled replan, so each segment has one
+    deployment operated under one effective instance.  The operated
+    deployment is always the eviction image of the planned one under the
+    segment's availability caps — a frozen static placement therefore
+    *loses* the traffic its revoked pairs carried, which is exactly the
+    degradation the repair modes are measured against.  Event re-solves
+    are adopted unconditionally (the incumbent is illegal under the new
+    supply); scheduled replans keep the base path's keep-best rule,
+    scored against the evicted incumbent."""
+    if fault_response not in ("repair", "cold", "static"):
+        raise ValueError(f"unknown fault_response {fault_response!r} "
+                         f"(expected 'repair', 'cold', or 'static')")
+    session = planner_obj if hasattr(planner_obj, "replan") else None
+    planner = _as_planner(planner_obj)
+    lam_path = np.asarray(lam_path, float)
+    T = lam_path.shape[0]
+    if window_h is None:
+        window_h = 24.0 / T
+    K = inst0.K
+    # Effective-instance cache: one `apply_faults` materialization (and
+    # one `__post_init__` tensor rebuild) per distinct supply state, not
+    # per window.
+    eff_cache: dict[bytes, Instance] = {}
+
+    def eff_inst(t: int) -> Instance:
+        key = faults.state_key(t, K)
+        got = eff_cache.get(key)
+        if got is None:
+            got = apply_faults(inst0, faults, t)
+            eff_cache[key] = got
+        return got
+
+    lam_fc0 = (lam_path.mean(axis=0) if static_forecast == "mean"
+               else lam_path[0])
+    deploy = planner(apply_faults(inst0.with_lam(lam_fc0), faults, 0))
+    fc = _ewma_forecasts(lam_path, forecast_ewma)
+    events = set(faults.change_points(K))
+    replans = fault_replans = evictions = 0
+    repair_walls: list[float] = []
+    degradations: list[int] = []
+    segments: list[tuple[int, int, Solution]] = []
+    t0 = 0
+    for t in range(1, T):
+        event = t in events
+        sched = replan_every is not None and t % replan_every == 0
+        if not (event or sched):
+            continue
+        inst_t = apply_faults(inst0.with_lam(fc[t]), faults, t)
+        new_dep = None
+        if event and fault_response != "static":
+            # Event-driven re-solve, adopted unconditionally: the
+            # incumbent deployment is illegal under the new supply.
+            w0 = time.perf_counter()
+            if fault_response == "repair" and session is not None:
+                res = session.repair(instance=inst_t)
+                rep = res.diagnostics.get("repair", {})
+                evictions += len(rep.get("evicted", []))
+                degradations.append(
+                    int(rep.get("degradation", {}).get("level", 0)))
+                new_dep = res.solution
+            else:
+                new_dep = planner(inst_t)
+            repair_walls.append(time.perf_counter() - w0)
+            fault_replans += 1
+        elif sched and fault_response != "static":
+            cand = planner(inst_t)
+            # Keep-best against what the incumbent can actually run under
+            # the current supply (its eviction image).
+            inc_op, _ = evict_unavailable(inst_t, deploy)
+            if objective(inst_t, cand) < objective(inst_t, inc_op) - 1e-6:
+                new_dep = cand
+                replans += 1
+            elif session is not None:
+                session.incumbent = inc_op
+        if new_dep is not None or event:
+            segments.append((t0, t, deploy))
+            t0 = t
+            if new_dep is not None:
+                deploy = new_dep
+    segments.append((t0, T, deploy))
+
+    costs = np.zeros(T)
+    viols = 0
+    cap = np.full(inst0.I, STRICT_CAP)
+    for (a, b, dep) in segments:
+        if b <= a:
+            continue
+        ie = eff_inst(a)     # supply state is constant over the segment
+        op_dep, lost = evict_unavailable(ie, dep)
+        evictions += len(lost)
+        rental_w = provisioning_cost(ie, op_dep) / inst0.Delta_T * window_h
+        if np.any(op_dep.q > 0.5):
+            system = Stage2System(ie, op_dep)
+            batch = ScenarioBatch.from_lam_path(lam_path[a:b])
+            op, v, _ = system.solve_batch(batch, u_cap=cap)
+            viols += int(v.sum())
+            costs[a:b] = rental_w + op * window_h
+        else:
+            # Nothing left deployed: every type fully unmet every window.
+            viols += inst0.I * (b - a)
+            pen = inst0.Delta_T * float(np.sum(inst0.phi))
+            costs[a:b] = rental_w + pen * window_h
+    return RollingResult(method="", mean_window_cost=float(costs.mean()),
+                         total_cost=float(costs.sum()),
+                         violation_rate=viols / (T * inst0.I),
+                         per_window_cost=costs, replans=replans,
+                         fault_replans=fault_replans, evictions=evictions,
+                         repair_wall_s=tuple(repair_walls),
+                         degradation_levels=tuple(degradations))
+
+
 def volatility_study(inst0: Instance, sigma: float, trials: int,
                      planner: Callable[[Instance], Solution],
                      replan_every: int | None, seed: int = 0,
@@ -178,18 +322,23 @@ def replay_study(inst0: Instance, planner: Callable[[Instance], Solution],
                  days: Sequence[str] = ("busy",), n_windows: int = 288,
                  stress: float | None = None,
                  replan_every: int | None = None, seed: int = 7,
-                 forecast_ewma: float = 0.4) -> RollingResult:
+                 forecast_ewma: float = 0.4,
+                 faults: FaultSchedule | None = None,
+                 fault_response: str = "repair") -> RollingResult:
     """Diurnal trace replay over one or more synthetic days (§5.3 extended).
 
     `days` concatenates per-day multiplier series ("busy"/"volatile") into a
     multi-day path; `n_windows` is windows PER DAY (window_h stays 24/n
     regardless of the number of days); `stress` applies a uniform
     delay+error inflation (e.g. 1.5 for the 1.5x out-of-sample stress) to
-    the operated instance before the replay.
+    the operated instance before the replay.  `faults`/`fault_response`
+    inject a supply-side `FaultSchedule` exactly as in `rolling` (the
+    schedule's `n_windows` should cover the full multi-day path).
     """
     inst = inst0.stressed(stress) if stress is not None else inst0
     mult = multi_day_multipliers(days, seed=seed, n_windows=n_windows)
     path = np.outer(mult, inst.lam)
     return rolling(inst, path, planner, replan_every=replan_every,
                    forecast_ewma=forecast_ewma, static_forecast="mean",
-                   window_h=24.0 / n_windows)
+                   window_h=24.0 / n_windows, faults=faults,
+                   fault_response=fault_response)

@@ -199,6 +199,12 @@ def feasibility(inst: Instance, sol: Solution, tol: float = 1e-6,
     # (8k) chain x <= z <= q
     v["chain"] = max(0.0, float(np.max(sol.x - sol.z - tol)),
                      float(np.max(sol.z - sol.q[None, :, :] - tol)))
+    # tier availability caps (supply-side faults; core/faults.py) — only
+    # reported when caps are set, so the base constraint-family keys are
+    # unchanged for uncapped instances.
+    if inst.avail_gpus is not None:
+        v["availability"] = max(0.0, float(
+            np.max(sol.y.sum(axis=0) - inst.avail_gpus)))
     # unmet cap
     if enforce_zeta:
         v["unmet_cap"] = max(0.0, float(np.max(sol.u - inst.zeta)))
@@ -245,4 +251,8 @@ def slack_report(inst: Instance, sol: Solution,
     rep["delay"] = float(np.min(inst.Delta - u["dproc"]))
     rep["error"] = float(np.min(inst.eps - u["err"]))
     rep["unmet"] = float(np.min(inst.zeta - sol.u))
+    if inst.avail_gpus is not None:
+        # devices still rentable on the scarcest tier (faulted instances)
+        rep["availability"] = float(
+            np.min(inst.avail_gpus - sol.y.sum(axis=0)))
     return rep

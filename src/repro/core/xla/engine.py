@@ -500,6 +500,17 @@ def agh_xla(inst: Instance, R: int | None = None, L: int = 3,
     infinite.
     """
     t0 = time.perf_counter()
+    if inst.avail_gpus is not None:
+        # Tier availability caps (core/faults.py) are enforced by the
+        # numpy commit guards; the device screening kernels don't model
+        # them, so capped (faulted) instances run the numpy oracle path.
+        from ..agh import agh as _agh_numpy
+        if stats is not None:
+            stats["xla_avail_fallback"] = True
+        return _agh_numpy(inst, R=R, L=L, seed=seed, patience=patience,
+                          validate=validate, local_search=local_search,
+                          workers=workers, warm_start=warm_start,
+                          priority_orders=priority_orders, stats=stats)
     if local_search == "reference":
         raise ValueError("engine='xla' does not implement "
                          "local_search='reference'; use 'batched' or "

@@ -215,20 +215,33 @@ def plan(request: PlanRequest | str | None = None, *,
     t0, c0 = time.perf_counter(), time.process_time()
     sol, diag = spec.solve(inst, request.options, warm)
     wall, cpu = time.perf_counter() - t0, time.process_time() - c0
-    # Full constraint system INCLUDING the zeta unmet cap, so `feasible`
-    # can never contradict slack["unmet"].  (The heuristics themselves
-    # treat zeta as soft — Stage-2 routing enforces it — so a
-    # zeta-violating plan is reported infeasible here yet still operable.)
-    # One shared usage pass feeds both the violation and slack views.
-    usage = _constraint_usage(inst, sol)
-    viol = feasibility(inst, sol, enforce_zeta=True, usage=usage)
     diag = dict(diag)
     if request.warm_start is not None:
         diag.setdefault("warm_started", spec.supports_warm_start)
+    return build_result(spec.name, inst, sol, wall, cpu, diag,
+                        request.options)
+
+
+def build_result(solver: str, inst: Instance, sol: Solution, wall_s: float,
+                 cpu_s: float, diagnostics: dict,
+                 options: PlanOptions) -> PlanResult:
+    """Assemble a `PlanResult` from a solved `Solution` — the one place
+    the violation/slack views are derived, shared by `plan()` and
+    `PlanSession.repair()` (which scores ladder retries against the REAL
+    faulted instance through this same path).
+
+    The constraint system is evaluated INCLUDING the zeta unmet cap, so
+    `feasible` can never contradict slack["unmet"].  (The heuristics
+    themselves treat zeta as soft — Stage-2 routing enforces it — so a
+    zeta-violating plan is reported infeasible here yet still operable.)
+    One shared usage pass feeds both the violation and slack views.
+    """
+    usage = _constraint_usage(inst, sol)
+    viol = feasibility(inst, sol, enforce_zeta=True, usage=usage)
     return PlanResult(
-        solver=spec.name, solution=sol, objective=objective(inst, sol),
+        solver=solver, solution=sol, objective=objective(inst, sol),
         cost_breakdown=cost_terms(inst, sol),
         slack=slack_report(inst, sol, usage=usage), violations=viol,
         feasible=all(v <= 1e-4 for v in viol.values()),
-        wall_s=wall, cpu_s=cpu, diagnostics=diag,
-        options=request.options.to_dict())
+        wall_s=wall_s, cpu_s=cpu_s, diagnostics=diagnostics,
+        options=options.to_dict())

@@ -20,19 +20,45 @@ fleet, and tests/test_perf_smoke.py guards it.
 `core.rolling.rolling()` accepts a session wherever it took a bare
 planner callable, which turns every rolling-horizon window after the
 first into a warm-started solve.
+
+`repair()` is the supply-fault counterpart of `replan()`: same warm
+incumbent, but the drift is on the SUPPLY side (tier outages, spot
+revocations, capacity shocks from `core.faults`) — assignments on lost
+capacity are evicted and the displaced load re-routed by
+`core.agh.agh_repair`, with a graceful-degradation ladder (unmet-cap →
+delay-relax → budget-overdraft) instead of a bare infeasibility error.
 """
 from __future__ import annotations
 
 import dataclasses
+import time
 
 import numpy as np
 
+from repro.core.agh import agh_repair
+from repro.core.faults import FaultSchedule, apply_faults
 from repro.core.instance import Instance
 from repro.core.solution import Solution
 
-from .api import PlanOptions, PlanRequest, PlanResult, plan
+from .api import PlanOptions, PlanRequest, PlanResult, build_result, plan
 from .registry import get_solver
 from .specs import ScenarioSpec
+
+
+def _unmet_excess(inst: Instance, sol: Solution) -> float:
+    """Arrival-weighted unmet demand beyond the per-type zeta caps — the
+    quantity the degradation ladder is minimizing when strict repair is
+    out of reach (queries/hour left unserved past the SLO contract)."""
+    return float(np.sum(np.maximum(sol.u - inst.zeta, 0.0) * inst.lam))
+
+
+def _ladder_score(inst: Instance, res: PlanResult) -> tuple[float, float]:
+    """Lexicographic degradation score: excess unmet first, then total
+    constraint-violation mass.  Ladder retries are adopted only on a
+    strict improvement, so a relaxed re-solve can never make the
+    operated plan worse than what the strict rung already produced."""
+    return (_unmet_excess(inst, res.solution),
+            float(sum(res.violations.values())))
 
 
 @dataclasses.dataclass
@@ -55,12 +81,15 @@ class PlanSession:
     engine: str | None = None
     replan_patience: int = 2
     replan_restarts: int = 0
+    repair_delay_relax: float = 1.5
+    repair_budget_overdraft: float = 1.5
     incumbent: Solution | None = None
     last_result: PlanResult | None = None
     last_instance: Instance | None = None
     winning_order: tuple[int, ...] | None = None
     plans: int = 0
     warm_replans: int = 0
+    repairs: int = 0
 
     def __post_init__(self) -> None:
         if self.engine is not None:
@@ -117,6 +146,125 @@ class PlanSession:
                                options=opts, warm_start=self.incumbent))
         self._install(inst, res, warm=warm)
         return res
+
+    def repair(self, instance: Instance | None = None,
+               scenario: ScenarioSpec | str | None = None,
+               schedule: FaultSchedule | None = None, t: int = 0,
+               passes: int = 1) -> PlanResult:
+        """Repair the incumbent after a supply-side fault, degrading
+        gracefully instead of erroring when strict repair is infeasible.
+
+        The instance is the *faulted* supply view — either passed
+        directly (e.g. from `core.rolling`'s fault replay), or derived
+        here via ``schedule=``/``t=`` (`core.faults.apply_faults` on the
+        remembered or given instance).  With a shape-compatible AGH
+        incumbent the solve is `core.agh.agh_repair`: surviving
+        assignments pinned, pairs on lost capacity evicted through the
+        drain machinery, displaced load re-routed by one Phase-2 pass and
+        `passes` incremental local-search passes.  Otherwise (no
+        incumbent, population changed, non-warm-startable solver) it
+        falls back to a cold registry solve on the faulted instance.
+
+        When the strict solve is infeasible, a graceful-degradation
+        ladder runs — each rung adopted only if it strictly improves
+        `_ladder_score` against the REAL faulted instance:
+
+        1. **unmet-cap** — hard constraints hold; only the zeta unmet cap
+           overshoots.  No re-solve: the overshoot is reported.
+        2. **delay-relax** — re-solve with the delay SLOs stretched by
+           ``repair_delay_relax`` (coverage bought with latency).
+        3. **budget-overdraft** — re-solve with the budget stretched by
+           ``repair_budget_overdraft`` on top; the overdraft is flagged.
+
+        The result always carries ``diagnostics["repair"]`` with the
+        evicted pairs, warm/cold provenance, and a ``degradation`` report
+        (``level`` 0–3, rung ``name``, the ``ladder`` rungs attempted,
+        and the residual violation families) — an infeasible repair is
+        never silent: its level is >= 1 with a non-empty report."""
+        if instance is None and scenario is None:
+            if self.last_instance is None:
+                raise ValueError("repair() without instance=/scenario= "
+                                 "needs a prior plan()/replan()")
+            inst = self.last_instance
+        else:
+            inst = self._resolve(instance, scenario)
+        if schedule is not None:
+            inst = apply_faults(inst, schedule, t)
+        t0, c0 = time.perf_counter(), time.process_time()
+        sol, diag, warm = self._repair_solve(inst, passes)
+        evicted = [list(map(int, jk)) for jk in diag.get("evicted", [])]
+        res = build_result(self.solver, inst, sol, 0.0, 0.0, dict(diag),
+                           self.options)
+        level, name = 0, "strict"
+        tried = ["strict"]
+        if not res.feasible:
+            level, name = 1, "unmet-cap"
+            tried.append("delay-relax")
+            relaxed = dataclasses.replace(
+                inst, Delta=inst.Delta * self.repair_delay_relax)
+            cand = self._ladder_retry(inst, relaxed, res, passes)
+            base = inst
+            if cand is not None:
+                res, base = cand, relaxed
+                level, name = 2, "delay-relax"
+            if not res.feasible:
+                tried.append("budget-overdraft")
+                overdrawn = dataclasses.replace(
+                    base, delta=inst.delta * self.repair_budget_overdraft)
+                cand = self._ladder_retry(inst, overdrawn, res, passes)
+                if cand is not None:
+                    res = cand
+                    level, name = 3, "budget-overdraft"
+        if res.feasible:
+            # A ladder retry may land a plan that satisfies the REAL
+            # constraint system outright — then nothing was degraded.
+            level, name = 0, "strict"
+        res.wall_s = time.perf_counter() - t0
+        res.cpu_s = time.process_time() - c0
+        res.diagnostics["repair"] = {
+            "evicted": evicted, "warm": warm, "wall_s": res.wall_s,
+            "degradation": {
+                "level": level, "name": name, "ladder": tried,
+                "violations": {k: float(v)
+                               for k, v in res.violations.items()
+                               if v > 1e-4},
+                "unmet_excess": _unmet_excess(inst, res.solution),
+                "zeta_overshoot": float(
+                    res.violations.get("unmet_cap", 0.0)),
+                "budget_overdraft": float(
+                    res.violations.get("budget", 0.0)),
+            }}
+        self._install(inst, res, warm=warm)
+        self.repairs += 1
+        return res
+
+    def _repair_solve(self, inst: Instance,
+                      passes: int) -> tuple[Solution, dict, bool]:
+        """One repair solve: warm `agh_repair` when the incumbent can seed
+        it, else a cold registry solve.  Returns (solution, diagnostics,
+        warm?)."""
+        spec = get_solver(self.solver)
+        if (self.incumbent is not None and spec.supports_warm_start
+                and self.incumbent.x.shape == (inst.I, inst.J, inst.K)):
+            stats: dict = {}
+            sol = agh_repair(inst, self.incumbent, L=max(1, passes),
+                             local_search=self.options.local_search,
+                             validate=self.options.validate, stats=stats)
+            return sol, stats, True
+        sol, diag = spec.solve(inst, self.options, None)
+        return sol, dict(diag), False
+
+    def _ladder_retry(self, real: Instance, relaxed: Instance,
+                      cur: PlanResult, passes: int) -> PlanResult | None:
+        """Solve one ladder rung on the `relaxed` instance, score it
+        against the REAL faulted instance, and return it only on a strict
+        `_ladder_score` improvement over the current best."""
+        sol, diag, _ = self._repair_solve(relaxed, passes)
+        cand = build_result(self.solver, real, sol, 0.0, 0.0, dict(diag),
+                            self.options)
+        if _ladder_score(real, cand) < _ladder_score(real, cur):
+            return cand
+        return None
 
     def seed(self, instance: Instance, result: PlanResult) -> None:
         """Install an externally computed `PlanResult` as the incumbent

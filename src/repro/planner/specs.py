@@ -31,12 +31,42 @@ from repro.core.trace import (diurnal_multipliers, multi_day_multipliers,
                               random_walk_lambdas)
 
 
+# Grid carbon intensity by region, kgCO2e per kWh (rounded long-run
+# averages: hydro/nuclear-heavy EU-North vs coal-heavy Asia-East).  Keyed
+# by the region names `FleetSpec.regions` draws from.
+REGION_INTENSITY: dict[str, float] = {
+    "eu-north": 0.04,
+    "us-central": 0.40,
+    "asia-east": 0.60,
+}
+
+
 @dataclasses.dataclass(frozen=True)
 class FleetSpec:
-    """Hardware catalog + parallelism lattice."""
+    """Hardware catalog + parallelism lattice + supply economics.
+
+    ``spot_tiers`` marks part of the catalog spot-priced through
+    `core.faults.with_spot_tiers` — ``"quantized"`` puts the
+    INT-quantized tiers on spot (the cheap, revocable capacity pool),
+    ``"all"`` the whole fleet; rental is discounted by ``spot_discount``
+    and revocable at ``spot_revoke_rate`` Poisson revocations/hour
+    (consumed by `ScenarioSpec.fault_schedule`).
+
+    ``regions`` places tiers round-robin across named regions and, with
+    ``carbon_price`` ($/kgCO2e), folds each region's grid carbon
+    intensity (`REGION_INTENSITY`) into the rental rate via
+    `core.carbon.carbon_priced` — the multi-region cost asymmetry the
+    planner then arbitrages.  ``carbon_price`` without ``regions`` prices
+    every tier at the default grid intensity.
+    """
     catalog: str = "gpu"                    # "gpu" (paper) | "tpu" (bridge)
     tp_degrees: tuple[int, ...] | None = None
     pp_depths: tuple[int, ...] | None = None
+    spot_tiers: str | None = None           # None | "quantized" | "all"
+    spot_discount: float = 0.8
+    spot_revoke_rate: float = 0.25
+    regions: tuple[str, ...] | None = None
+    carbon_price: float | None = None
 
     def apply(self, inst: Instance) -> Instance:
         if self.catalog == "tpu":
@@ -51,7 +81,42 @@ class FleetSpec:
                 tp_degrees=list(self.tp_degrees or inst.tp_degrees),
                 pp_depths=list(self.pp_depths or inst.pp_depths))
             inst.__post_init__()
+        if self.carbon_price is not None:
+            from repro.core.carbon import carbon_priced
+            inst = carbon_priced(inst, carbon_price=self.carbon_price,
+                                 intensity=self.tier_intensity(inst))
+        if self.spot_tiers is not None:
+            from repro.core.faults import with_spot_tiers
+            inst = with_spot_tiers(inst, self.spot_mask(inst),
+                                   discount=self.spot_discount,
+                                   revoke_rate=self.spot_revoke_rate)
         return inst
+
+    def spot_mask(self, inst: Instance) -> np.ndarray:
+        """[K] bool mask of the spot-priced tiers under ``spot_tiers``."""
+        if self.spot_tiers == "all":
+            return np.ones(inst.K, dtype=bool)
+        if self.spot_tiers == "quantized":
+            return np.array(["INT" in str(n).upper()
+                             for n in inst.tier_names], dtype=bool)
+        raise ValueError(f"unknown spot_tiers {self.spot_tiers!r} "
+                         f"(expected 'quantized' or 'all')")
+
+    def region_of(self, inst: Instance) -> tuple[str, ...] | None:
+        """Tier -> region assignment (round-robin over ``regions``)."""
+        if self.regions is None:
+            return None
+        R = len(self.regions)
+        return tuple(self.regions[k % R] for k in range(inst.K))
+
+    def tier_intensity(self, inst: Instance) -> dict[str, float] | None:
+        """Per-tier-name grid intensity for `core.carbon` (None = default
+        intensity everywhere)."""
+        placed = self.region_of(inst)
+        if placed is None:
+            return None
+        return {str(n): REGION_INTENSITY[r]
+                for n, r in zip(inst.tier_names, placed, strict=True)}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -142,6 +207,22 @@ class ScenarioSpec:
             raise ValueError(f"unknown demand process {w.demand!r}")
         return np.outer(mult, inst.lam)
 
+    def fault_schedule(self, inst: Instance | None = None,
+                       n_windows: int | None = None,
+                       frac: float = 1.0):
+        """Seeded supply-fault schedule matching this scenario's spot
+        economics: a Poisson revocation process over the spot tiers
+        (`core.faults.poisson_revocations`, rate from the fleet's
+        ``spot_revoke_rate``).  Returns an EMPTY `FaultSchedule` when the
+        fleet has no spot tiers — callers can pass it to `rolling`
+        unconditionally."""
+        from repro.core.faults import FaultSchedule, poisson_revocations
+        inst = inst if inst is not None else self.build()
+        T = n_windows if n_windows is not None else self.workload.n_windows
+        events = poisson_revocations(inst, T, seed=self.seed + 13,
+                                     frac=frac)
+        return FaultSchedule(n_windows=T, events=tuple(events))
+
 
 # ---------------------------------------------------------------------------
 # Named scenario generators
@@ -177,6 +258,20 @@ SCENARIOS: dict[str, ScenarioSpec] = {
     # Out-of-sample robustness: 1.5x uniform delay+error inflation.
     "stress-1.5x": ScenarioSpec(
         name="stress-1.5x", slo=SLOSpec(stress=1.5)),
+    # Spot economics: the INT-quantized tiers move to a 20%-discounted,
+    # revocable spot pool; `.fault_schedule()` yields the matching Poisson
+    # revocation process for failure replays (core/faults.py).
+    "spot-fleet": ScenarioSpec(
+        name="spot-fleet",
+        fleet=FleetSpec(spot_tiers="quantized"),
+        workload=WorkloadSpec(demand="diurnal")),
+    # Carbon-priced multi-region fleet: tiers round-robin across three
+    # grids (core/carbon.py intensities), carbon folded into rental at
+    # $0.15/kgCO2e — clean-region capacity gets structurally cheaper.
+    "multi-region": ScenarioSpec(
+        name="multi-region",
+        fleet=FleetSpec(regions=("eu-north", "us-central", "asia-east"),
+                        carbon_price=0.15)),
 }
 
 

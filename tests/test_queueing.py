@@ -1,0 +1,88 @@
+"""Direct tests for core/queueing.py — the M/G/1-PS load extension.
+
+The load-free constraint system (tests/test_core_allocation.py) never
+exercises the queueing layer directly; these pin its three contracts:
+the PS inflation is a true inflation (never below the load-free delay),
+`with_queueing_margin` makes the TRUE loaded delay of any emitted plan
+satisfy the ORIGINAL SLO (D_true <= Delta) while keeping utilization
+under the rho_max cap, and the margin transform itself moves
+monotonically in rho_max.
+"""
+import numpy as np
+
+from repro.core import agh, default_instance, random_instance
+from repro.core.queueing import (queueing_delay, queueing_violations,
+                                 slo_attainment_with_queueing, utilization,
+                                 with_queueing_margin)
+from repro.core.solution import proc_delay
+
+RHO_GRID = (0.5, 0.7, 0.9)
+
+
+def _cases():
+    return [default_instance(), random_instance(10, 10, 10, seed=3)]
+
+
+def test_queueing_delay_is_an_inflation():
+    """D_queue >= D_proc pointwise (PS factor 1/(1-rho) >= 1), equality
+    exactly where the plan routes nothing."""
+    for inst in _cases():
+        sol = agh(inst)
+        d0, dq = proc_delay(inst, sol), queueing_delay(inst, sol)
+        assert np.all(dq >= d0 - 1e-9)
+        rho = utilization(inst, sol)
+        assert np.all(rho >= 0.0) and np.all(rho <= 0.999)
+        # inactive pairs carry zero utilization by construction
+        assert np.all(rho[sol.y <= 0] == 0.0)
+
+
+def test_margin_bound_true_delay_within_slo():
+    """The paper-extension guarantee: plan against
+    `with_queueing_margin(inst, rho_max)`, then the queueing-ADJUSTED
+    delay evaluated on the ORIGINAL instance still meets the original
+    Delta — D_true = D/(1-rho) <= Delta — and the measured utilization
+    stays under the cap."""
+    for inst in _cases():
+        for rho_max in RHO_GRID:
+            sol = agh(with_queueing_margin(inst, rho_max))
+            assert int(queueing_violations(inst, sol).sum()) == 0, \
+                (inst.I, rho_max)
+            assert utilization(inst, sol).max() <= rho_max + 1e-9
+        # contrast: the load-free plan does break SLOs once load counts
+        # (both fixture instances exhibit this; if a future engine change
+        # removes it the contrast assertion below should be revisited,
+        # not deleted)
+        base = agh(inst)
+        assert int(queueing_violations(inst, base).sum()) > 0
+
+
+def test_margin_transform_monotone_in_rho_max():
+    """Both knobs scale UP with rho_max: eta (usable capacity grows as
+    the utilization cap loosens) and the tau pre-inflation (a looser cap
+    means a larger worst-case PS factor 1/(1-rho_max) to plan against);
+    both strictly monotone, landing exactly on the documented formulas."""
+    inst = default_instance()
+    prev_eta = prev_tau = -np.inf
+    for rho_max in RHO_GRID:
+        m = with_queueing_margin(inst, rho_max)
+        assert np.isclose(m.eta, inst.eta * rho_max)
+        assert np.allclose(m.tau, inst.tau / (1.0 - rho_max))
+        assert m.eta > prev_eta
+        assert np.all(m.tau > prev_tau)
+        prev_eta, prev_tau = m.eta, np.max(m.tau)
+
+
+def test_slo_attainment_summary_consistent():
+    inst = default_instance()
+    sol = agh(inst)
+    rep = slo_attainment_with_queueing(inst, sol)
+    assert rep["violations_queueing"] == int(
+        queueing_violations(inst, sol).sum())
+    assert rep["violations_load_free"] == int(
+        np.sum(rep["proc_delay"] > inst.Delta + 1e-9))
+    assert np.isclose(rep["max_rho"], utilization(inst, sol).max())
+    assert np.isclose(rep["margin_min"], float(np.min(
+        (inst.Delta - rep["queue_delay"]) / inst.Delta)))
+    # the summary's two delay views agree with the module's own functions
+    assert np.allclose(rep["queue_delay"], queueing_delay(inst, sol))
+    assert np.allclose(rep["proc_delay"], proc_delay(inst, sol))
