@@ -19,15 +19,25 @@ _PLANNER_EXPORTS = (
     "ScenarioSpec", "scenario", "list_scenarios",
 )
 
-__all__ = list(_PLANNER_EXPORTS)
+# Lazily resolved from repro.serving — the closed-loop driver surface.
+# Also numpy-only: repro.serving defers its jax engine to first use, so
+# ``from repro import serve`` works in numpy/scipy-only environments.
+_SERVING_EXPORTS = (
+    "serve", "ServeResult", "TrafficSpec", "ControllerSpec", "Station",
+)
+
+__all__ = list(_PLANNER_EXPORTS) + list(_SERVING_EXPORTS)
 
 
 def __getattr__(name: str):
     if name in _PLANNER_EXPORTS:
         from repro import planner
         return getattr(planner, name)
+    if name in _SERVING_EXPORTS:
+        from repro import serving
+        return getattr(serving, name)
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 def __dir__():
-    return sorted(set(globals()) | set(_PLANNER_EXPORTS))
+    return sorted(set(globals()) | set(__all__))

@@ -36,12 +36,17 @@ from typing import Callable, Sequence
 import numpy as np
 
 from .faults import FaultSchedule, apply_faults, evict_unavailable
+from .forecast import ewma_forecasts, relative_drift
 from .instance import Instance, ScenarioBatch
 from .solution import Solution, objective, provisioning_cost
 from .stage2 import Stage2System, stage2_cost, stage2_lp
 from .trace import multi_day_multipliers, random_walk_lambdas
 
 STRICT_CAP = 0.02
+
+# The EWMA recursion moved to `core.forecast` (shared with the serving
+# controller); the old private name stays importable for callers/tests.
+_ewma_forecasts = ewma_forecasts
 
 
 @dataclasses.dataclass
@@ -58,17 +63,6 @@ class RollingResult:
     evictions: int = 0                       # pairs lost to capacity
     repair_wall_s: tuple = ()                # per-event re-solve wall (s)
     degradation_levels: tuple = ()           # repair ladder level per event
-
-
-def _ewma_forecasts(lam_path: np.ndarray, alpha: float) -> np.ndarray:
-    """Stacked EWMA forecasts: fc[t] = a·lam[t] + (1-a)·fc[t-1], seeded at
-    lam[0] — fc[t] is the forecast available AFTER observing window t."""
-    fc = np.empty_like(lam_path)
-    prev = lam_path[0].copy()
-    for t in range(lam_path.shape[0]):
-        prev = alpha * lam_path[t] + (1.0 - alpha) * prev
-        fc[t] = prev
-    return fc
 
 
 def _as_planner(planner) -> Callable[[Instance], Solution]:
@@ -90,7 +84,8 @@ def rolling(inst0: Instance, lam_path: np.ndarray,
             window_h: float | None = None,
             batched: bool = True,
             faults: FaultSchedule | None = None,
-            fault_response: str = "repair") -> RollingResult:
+            fault_response: str = "repair",
+            replan_drift: float | None = None) -> RollingResult:
     """Replay `lam_path` ([T, I] arrivals).  If `replan_every` is None the
     Stage-1 plan is held fixed (static); otherwise the planner re-runs
     every `replan_every` windows on an EWMA forecast with keep-best.
@@ -113,6 +108,14 @@ def rolling(inst0: Instance, lam_path: np.ndarray,
     ``"static"`` (no reaction — the frozen placement rides through the
     fault, the degradation baseline).  With ``faults=None`` this function
     is byte-identical to the pre-fault fast path.
+
+    `replan_drift` makes the `replan_every` cadence forecast-aware (the
+    same `core.forecast.relative_drift` trigger the closed-loop serving
+    controller uses): a scheduled replan point actually re-solves only
+    when the EWMA forecast has drifted more than `replan_drift`
+    (relative L1) from the rates the incumbent plan was built for.
+    ``None`` (the default) keeps the blind cadence, bit-identical to the
+    pre-drift behavior.
     """
     if faults is not None and not faults.is_empty:
         return _rolling_faulted(inst0, lam_path, planner, replan_every,
@@ -134,10 +137,14 @@ def rolling(inst0: Instance, lam_path: np.ndarray,
     replans = 0
     segments: list[tuple[int, int, Solution]] = []
     if replan_every is not None:
-        fc = _ewma_forecasts(lam_path, forecast_ewma)
+        fc = ewma_forecasts(lam_path, forecast_ewma)
+        lam_basis = lam_fc          # rates the deployed plan was built for
         t0 = 0
         for t in range(T):
             if t > 0 and t % replan_every == 0:
+                if (replan_drift is not None
+                        and relative_drift(fc[t], lam_basis) <= replan_drift):
+                    continue        # forecast hasn't moved: keep the plan
                 inst_fc = inst0.with_lam(fc[t])
                 cand = planner(inst_fc)
                 # Keep-best: both plans scored on the SAME current forecast
@@ -146,6 +153,7 @@ def rolling(inst0: Instance, lam_path: np.ndarray,
                 if objective(inst_fc, cand) < objective(inst_fc, deploy) - 1e-6:
                     segments.append((t0, t, deploy))
                     deploy, t0 = cand, t
+                    lam_basis = fc[t]
                     replans += 1
                 elif session is not None:
                     # Keep-best rejected the candidate: re-anchor the
@@ -228,7 +236,7 @@ def _rolling_faulted(inst0: Instance, lam_path: np.ndarray, planner_obj,
     lam_fc0 = (lam_path.mean(axis=0) if static_forecast == "mean"
                else lam_path[0])
     deploy = planner(apply_faults(inst0.with_lam(lam_fc0), faults, 0))
-    fc = _ewma_forecasts(lam_path, forecast_ewma)
+    fc = ewma_forecasts(lam_path, forecast_ewma)
     events = set(faults.change_points(K))
     replans = fault_replans = evictions = 0
     repair_walls: list[float] = []

@@ -37,6 +37,7 @@ import numpy as np
 
 from repro.core.agh import agh_repair
 from repro.core.faults import FaultSchedule, apply_faults
+from repro.core.forecast import relative_drift
 from repro.core.instance import Instance
 from repro.core.solution import Solution
 
@@ -90,6 +91,11 @@ class PlanSession:
     plans: int = 0
     warm_replans: int = 0
     repairs: int = 0
+    # Controller hooks (repro.serving.driver): every solve appends one
+    # JSON-safe row {kind, cause, wall_s, objective, warm} here, so the
+    # closed-loop replan log and the session's own accounting can never
+    # disagree.  `cause=` on replan()/repair() is recorded verbatim.
+    replan_log: list[dict] = dataclasses.field(default_factory=list)
 
     def __post_init__(self) -> None:
         if self.engine is not None:
@@ -102,17 +108,20 @@ class PlanSession:
         inst = self._resolve(instance, scenario)
         res = plan(PlanRequest(solver=self.solver, instance=inst,
                                options=self.options))
-        self._install(inst, res)
+        self._install(inst, res, kind="plan")
         return res
 
     def replan(self, instance: Instance | None = None,
                scenario: ScenarioSpec | str | None = None,
-               lam: np.ndarray | None = None) -> PlanResult:
+               lam: np.ndarray | None = None,
+               cause: str | None = None) -> PlanResult:
         """Warm-started solve for a drifted problem.
 
         ``lam=`` is shorthand for "same instance, new demand vector"; it
         requires a prior solve (the session remembers the instance).
         Without an incumbent this degrades to a cold `plan()`.
+        ``cause=`` tags the `replan_log` row (the serving controller
+        passes its trigger cause — "drift"/"slo"/"scheduled").
         """
         if lam is not None:
             if instance is not None or scenario is not None:
@@ -144,13 +153,22 @@ class PlanSession:
                 workers=0 if opts.workers is None else opts.workers)
         res = plan(PlanRequest(solver=self.solver, instance=inst,
                                options=opts, warm_start=self.incumbent))
-        self._install(inst, res, warm=warm)
+        self._install(inst, res, warm=warm, kind="replan", cause=cause)
         return res
+
+    def drift(self, lam: np.ndarray) -> float:
+        """Demand-weighted relative L1 drift of `lam` against the rates
+        the incumbent plan was built for (`core.forecast.relative_drift`)
+        — the controller's trigger statistic, exposed for inspection."""
+        if self.last_instance is None:
+            raise ValueError("drift() needs a prior plan()/replan()")
+        return relative_drift(np.asarray(lam, float),
+                              self.last_instance.lam)
 
     def repair(self, instance: Instance | None = None,
                scenario: ScenarioSpec | str | None = None,
                schedule: FaultSchedule | None = None, t: int = 0,
-               passes: int = 1) -> PlanResult:
+               passes: int = 1, cause: str | None = None) -> PlanResult:
         """Repair the incumbent after a supply-side fault, degrading
         gracefully instead of erroring when strict repair is infeasible.
 
@@ -234,7 +252,7 @@ class PlanSession:
                 "budget_overdraft": float(
                     res.violations.get("budget", 0.0)),
             }}
-        self._install(inst, res, warm=warm)
+        self._install(inst, res, warm=warm, kind="repair", cause=cause)
         self.repairs += 1
         return res
 
@@ -284,12 +302,17 @@ class PlanSession:
                            scenario=scenario).resolve_instance()
 
     def _install(self, inst: Instance, res: PlanResult,
-                 warm: bool = False) -> None:
+                 warm: bool = False, kind: str = "plan",
+                 cause: str | None = None) -> None:
         self.incumbent = res.solution
         self.last_result = res
         self.last_instance = inst
         self.plans += 1
         self.warm_replans += int(warm)
+        self.replan_log.append({
+            "kind": kind, "cause": cause, "warm": warm,
+            "wall_s": float(res.wall_s),
+            "objective": float(res.objective)})
         win = res.diagnostics.get("winning_order")
         if win is not None:
             # Keep the previous remembered ordering when the warm seed

@@ -10,9 +10,10 @@ Each active (model, tier) pair becomes a continuous-batching station:
   * the station runs a token-level loop: every decode step advances each
     in-flight request by one token and costs
         step = d_comp/TP + PP * d_comm   (the paper's per-token model)
-    amortized over the batch up to a compute-bound concurrency
-        B_max = eta * P_k * y / (alpha * lam-rate per token)  — approximated
-        by the station's utilization headroom;
+    amortized over the batch up to the station's concurrency bound
+        B_max = min(compute, KV-memory) in-flight requests, derived from
+        the plan's committed y/capacity by `stations.station_b_max`
+        (an explicit ``max_batch=`` overrides it);
   * prefill is compute-bound: h_i * d_comp / TP, admitted when a slot
     frees (FCFS).
 
@@ -57,10 +58,18 @@ class SimStats:
 
 
 def simulate(inst: Instance, sol: Solution, horizon_s: float = 600.0,
-             rate_scale: float = 1.0, max_batch: int = 32,
+             rate_scale: float = 1.0, max_batch: int | None = None,
              seed: int = 0) -> SimStats:
     """Event-driven simulation of the deployment in `sol` serving Poisson
-    traffic for `horizon_s` seconds (arrival rates scaled by rate_scale)."""
+    traffic for `horizon_s` seconds (arrival rates scaled by rate_scale).
+
+    ``max_batch=None`` (the default) derives each station's concurrency
+    bound from the plan's committed capacity via
+    `stations.station_b_max` — the compute/memory B_max this docstring
+    always promised; a small-capacity station no longer over-admits to a
+    blanket 32.  Passing an explicit int restores the historical fixed
+    bound bit-identically (the regression test pins this)."""
+    from .stations import station_b_max
     rng = np.random.default_rng(seed)
     I = inst.I
 
@@ -74,7 +83,9 @@ def simulate(inst: Instance, sol: Solution, horizon_s: float = 600.0,
             if cfg is None:
                 continue
             n, m = cfg
-            stations.append(dict(j=j, k=k, tp=n, pp=m,
+            b_max = (max_batch if max_batch is not None
+                     else station_b_max(inst, sol, j, k))
+            stations.append(dict(j=j, k=k, tp=n, pp=m, b_max=b_max,
                                  inflight=[], queue=[], t_free=0.0))
     if not stations:
         return SimStats(np.full(I, np.nan), np.full(I, np.nan),
@@ -118,9 +129,10 @@ def simulate(inst: Instance, sol: Solution, horizon_s: float = 600.0,
         ptr = 0
         inflight: list[SimRequest] = []
         t = 0.0
+        b_max = st["b_max"]
         while ptr < len(pending) or inflight:
-            # admit arrivals (up to max_batch in flight)
-            while (ptr < len(pending) and len(inflight) < max_batch
+            # admit arrivals (up to the station's concurrency bound)
+            while (ptr < len(pending) and len(inflight) < b_max
                    and pending[ptr].t_arrive <= t):
                 r = pending[ptr]
                 ptr += 1

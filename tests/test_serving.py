@@ -1,0 +1,239 @@
+"""Closed-loop serving layer: `repro.serve()`, stations, router, controller.
+
+Covers the PR's API-redesign surface end to end on the small default
+instance (seconds, not minutes):
+
+* the legacy `simulator.simulate()` stays bit-identical under an explicit
+  ``max_batch=`` (pinned oracle), while the new default derives each
+  station's concurrency bound from its committed capacity (the satellite
+  bugfix) — small-capacity stations admit fewer than the old blanket 32;
+* `serve()` is deterministic under its seeds, conserves routed traffic
+  according to the plan's `x` fractions, and degrades monotonically as
+  traffic scales past the plan's capacity;
+* the forecast controller fires on genuine demand drift and stays quiet
+  on stationary traffic; fault injection triggers a warm `repair()`;
+* `ServeResult` JSON round-trips exactly and ``from repro import serve``
+  works with jax missing entirely.
+"""
+import dataclasses
+import json
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core import agh, default_instance
+from repro.core.faults import FaultSchedule, TierOutage
+from repro.core.queueing import with_queueing_margin
+from repro.serving import (ControllerSpec, ReplanController, ServeResult,
+                           TrafficSpec, serve)
+from repro.serving.router import SHED, Router
+from repro.serving.simulator import simulate
+from repro.serving.stations import Req, StationSim, build_stations
+
+# Pinned pre-refactor output of simulate(default_instance, agh, 300 s,
+# rate_scale=0.02, max_batch=32, seed=0) — captured before simulator.py
+# learned the derived bound.  An explicit max_batch must stay
+# bit-identical to the historical fixed-bound behaviour.
+ORACLE_N_SERVED = 88
+ORACLE_TTFT = [2.28044048, 0.51294643, 0.87837302,
+               0.61875, 0.86235424, 1.75080767]
+ORACLE_E2E_P95 = [10.05448856, 9.16854819, 8.61619262,
+                  7.05208464, 23.89130779, 4.28654712]
+ORACLE_ATTAIN = [0.26666667, 0.36363636, 0.56521739,
+                 0.77777778, 0.66666667, 1.0]
+
+
+@pytest.fixture(scope="module")
+def default_plan():
+    inst = default_instance()
+    return inst, agh(inst)
+
+
+def test_legacy_simulate_explicit_max_batch_bit_identical(default_plan):
+    inst, sol = default_plan
+    st = simulate(inst, sol, horizon_s=300.0, rate_scale=0.02,
+                  max_batch=32, seed=0)
+    assert st.n_served == ORACLE_N_SERVED
+    np.testing.assert_allclose(st.per_type_ttft_p50, ORACLE_TTFT, rtol=1e-7)
+    np.testing.assert_allclose(st.per_type_e2e_p95, ORACLE_E2E_P95,
+                               rtol=1e-7)
+    np.testing.assert_allclose(st.per_type_slo_attain, ORACLE_ATTAIN,
+                               rtol=1e-7)
+
+
+def test_station_b_max_tracks_committed_capacity(default_plan):
+    """The satellite bugfix: B_max follows the plan's y, not a fixed 32 —
+    shrinking a station's committed GPUs shrinks what it may admit."""
+    inst, sol = default_plan
+    full = build_stations(inst, sol)
+    assert full and all(s.b_max >= 1 for s in full)
+    small = dataclasses.replace(sol, y=np.maximum(1.0, sol.y * 0.1))
+    shrunk = build_stations(inst, small)
+    by_jk = {(s.j, s.k): s for s in shrunk}
+    for s in full:
+        assert by_jk[(s.j, s.k)].b_max < s.b_max
+    # A ~1-GPU station admits what it can sustain, not the blanket 32.
+    assert all(s.b_max < 32 for s in shrunk)
+
+
+def test_station_sim_respects_concurrency_bound(default_plan):
+    inst, sol = default_plan
+    st = build_stations(inst, sol)[0]
+    sim = StationSim(inst, st, b_eff=3)
+    sim.push([Req(qtype=0, t_arrive=0.01 * a, h=32, f=16)
+              for a in range(50)])
+    sim.drain()
+    done = sim.take_done()
+    assert len(done) == 50
+    assert sim.peak_inflight <= 3
+    for r in done:
+        assert 0 <= r.t_first <= r.t_done
+
+
+def test_serve_deterministic_under_seeds(default_plan):
+    inst, sol = default_plan
+    tr = TrafficSpec(horizon_s=900.0, window_s=300.0, rate_scale=0.02,
+                     seed=3)
+    ctl = ControllerSpec(mode="static")
+    a = serve(sol, instance=inst, traffic=tr, controller=ctl)
+    b = serve(sol, instance=inst, traffic=tr, controller=ctl)
+    assert a.to_json(sort_keys=True) == b.to_json(sort_keys=True)
+    assert a.n_arrived > 0 and a.n_served > 0
+
+
+def test_router_conserves_plan_fractions(default_plan):
+    """Weighted-random routing reproduces the plan's x fractions (and the
+    shed residual 1 - sum_jk x) on a deterministic uniform grid."""
+    inst, sol = default_plan
+    stations = build_stations(inst, sol)
+    router = Router(inst, sol, stations)
+    us = np.linspace(0.0, 1.0, 20001)[:-1]   # [0, 1)
+    for i in range(inst.I):
+        hits = np.zeros(len(stations))
+        shed = 0
+        for u in us:
+            s = router.route(i, float(u))
+            if s == SHED:
+                shed += 1
+            else:
+                hits[s] += 1
+        want = np.array([sol.x[i, st.j, st.k] for st in stations])
+        np.testing.assert_allclose(hits / len(us), want, atol=1e-3)
+        assert abs(shed / len(us) - (1.0 - want.sum())) < 1e-3
+
+
+def test_attainment_monotone_in_rate_scale():
+    """With the station concurrency pinned (concurrency_scale=1.0),
+    pushing more traffic through the same fleet never improves SLO
+    attainment."""
+    inst = default_instance()
+    sol = agh(inst)                  # no queueing margin: saturable
+    attains = []
+    for rs in (0.2, 0.8, 1.6):
+        r = serve(sol, instance=inst,
+                  traffic=TrafficSpec(horizon_s=900.0, window_s=300.0,
+                                      rate_scale=rs, concurrency_scale=1.0,
+                                      seed=5),
+                  controller=ControllerSpec(mode="static"))
+        attains.append(r.attainment())
+    assert attains[0] >= attains[1] - 0.02
+    assert attains[1] >= attains[2] - 0.02
+    assert attains[0] > attains[2]          # capacity actually saturates
+
+
+def test_controller_fires_on_drift_quiet_when_stationary():
+    lam = np.array([100.0, 50.0])
+    spec = ControllerSpec(mode="forecast", warmup=1, cooldown=2,
+                          ewma_alpha=0.5, drift_threshold=0.25)
+    quiet = ReplanController(spec, lam)
+    for w in range(10):
+        cause, drift = quiet.observe(w, lam, viol_frac=0.0)
+        assert cause is None and drift < 1e-9
+    drifting = ReplanController(spec, lam)
+    fired = []
+    for w in range(10):
+        cause, _ = drifting.observe(w, lam * 3.0, viol_frac=0.0)
+        if cause is not None:
+            fired.append((w, cause))
+            drifting.adopted(w, drifting.forecast)
+    assert fired and fired[0][1] == "drift"
+    # Cooldown: no two firings closer than `cooldown` windows.
+    gaps = np.diff([w for w, _ in fired])
+    assert np.all(gaps >= spec.cooldown)
+
+
+def test_controller_slo_budget_and_fixed_cadence():
+    lam = np.array([10.0])
+    spec = ControllerSpec(mode="forecast", warmup=0, cooldown=1,
+                          violation_budget=0.05, budget_windows=2,
+                          drift_threshold=10.0)   # drift can never fire
+    ctl = ReplanController(spec, lam)
+    assert ctl.observe(0, lam, viol_frac=0.2)[0] is None   # streak = 1
+    assert ctl.observe(1, lam, viol_frac=0.2)[0] == "slo"  # streak = 2
+    fixed = ReplanController(ControllerSpec(mode="fixed", replan_every=3),
+                             lam)
+    causes = [fixed.observe(w, lam, viol_frac=1.0)[0] for w in range(7)]
+    assert causes == [None, None, None, "scheduled", None, None,
+                      "scheduled"]
+    static = ReplanController(ControllerSpec(mode="static"), lam)
+    assert all(static.observe(w, lam * 9, viol_frac=1.0)[0] is None
+               for w in range(5))
+
+
+def test_serve_forecast_replans_on_diurnal_drift():
+    """End to end: diurnal traffic moves demand, the controller replans
+    with cause 'drift'/'slo'; the same day under mode='static' does not."""
+    inst = default_instance()
+    sol = agh(with_queueing_margin(inst, rho_max=0.5))
+    tr = TrafficSpec(horizon_s=3600.0, window_s=300.0, rate_scale=0.02,
+                     trace="volatile", seed=2)
+    r_fc = serve(sol, instance=inst, traffic=tr,
+                 controller=ControllerSpec(mode="forecast", rho_max=0.5,
+                                           warmup=1, cooldown=2))
+    assert r_fc.replans and all(e.cause in ("drift", "slo")
+                                for e in r_fc.replans)
+    r_st = serve(sol, instance=inst, traffic=tr,
+                 controller=ControllerSpec(mode="static"))
+    assert not r_st.replans
+
+
+def test_serve_fault_triggers_warm_repair():
+    inst = default_instance()
+    sol = agh(inst)
+    busiest = int(np.argmax(sol.y.sum(axis=0)))
+    sched = FaultSchedule(n_windows=6, events=(
+        TierOutage(tier=busiest, t0=2, t1=5),))
+    r = serve(sol, instance=inst,
+              traffic=TrafficSpec(horizon_s=1800.0, window_s=300.0,
+                                  rate_scale=0.01, seed=4),
+              controller=ControllerSpec(mode="static"), faults=sched)
+    assert any(e.cause == "fault" for e in r.replans)
+
+
+def test_serve_result_json_roundtrip(default_plan):
+    inst, sol = default_plan
+    r = serve(sol, instance=inst,
+              traffic=TrafficSpec(horizon_s=600.0, window_s=300.0,
+                                  rate_scale=0.02, seed=6),
+              controller=ControllerSpec(mode="static"))
+    r2 = ServeResult.from_json(r.to_json())
+    assert r2.to_json(sort_keys=True) == r.to_json(sort_keys=True)
+    assert r2.summary() == r.summary()
+    # nan round-trips as null and back
+    assert json.loads(r.to_json())["per_type_ttft_p50"] is not None
+
+
+def test_serve_importable_without_jax():
+    """`from repro import serve` must work when jax cannot be imported —
+    the serving driver and types are numpy/stdlib only."""
+    code = (
+        "import sys; sys.modules['jax'] = None; "
+        "from repro import serve, ServeResult, TrafficSpec, ControllerSpec;"
+        " print('ok')"
+    )
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, timeout=120)
+    assert out.returncode == 0, out.stderr
+    assert out.stdout.strip() == "ok"
