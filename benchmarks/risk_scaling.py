@@ -1,0 +1,151 @@
+"""Risk-evaluation scaling: batched pdhg engine vs the exact HiGHS oracle.
+
+One row per scenario count S: wall clock for `repro.risk.risk_evaluate`
+through the batched solver (anchor-basis warm starts + Woodbury kernel,
+jax) against the sequential exact oracle.  The oracle is *measured* up
+to ``EXACT_CAP`` scenarios and extrapolated linearly beyond (it is a
+per-scenario loop, so extrapolation is exact in expectation); rows
+record which.  Where the oracle runs in full, the row also carries the
+relative objective agreement (the acceptance contract is rtol 1e-5,
+pinned per-scenario in tests/test_risk.py).
+
+A jit warm-up pass at the same S runs before the timed pdhg pass, so
+compile time (and the persistent-cache load) never pollutes the timed
+row — the same protocol as the xla allocator benchmarks (compile cost
+is a one-off; the timed row is the steady state a sweep would see).
+
+The closing row is the subsystem's reason to exist: `rank_deployments`
+scores GH vs AGH under the paper's 1.5x stress family and reports the
+expected-cost and CVaR_0.95 orderings side by side — a plan that wins
+on average but loses the tail is visible in one line.
+
+``--trajectory-out PATH`` appends this run's rows to the append-only
+``BENCH_allocator.json`` artifact, same as `allocator_scaling`.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core import agh, gh, random_instance
+
+from .common import emit
+
+SIZE = (20, 20, 20)                  # the acceptance instance scale
+S_LIST = (500, 5_000, 20_000)        # standard sweep
+S_LIST_FULL = (500, 5_000, 20_000, 100_000)
+S_LIST_QUICK = (300, 2_000)          # CI smoke
+EXACT_CAP = 2_000                    # oracle measured up to here, then
+                                     # extrapolated (per-scenario loop)
+RANK_S = {"quick": 1_000, "std": 5_000, "full": 20_000}
+
+
+def run(quick: bool = False, full: bool = False,
+        s_list: tuple[int, ...] | None = None) -> list[dict]:
+    from repro.risk import rank_deployments, risk_evaluate
+
+    if s_list is None:
+        s_list = (S_LIST_QUICK if quick
+                  else (S_LIST_FULL if full else S_LIST))
+    exact_cap = EXACT_CAP if not full else max(S_LIST_FULL[:-1])
+    inst = random_instance(*SIZE, seed=42)
+    deploy = gh(inst)
+    size = "(%d,%d,%d)" % SIZE
+    rows: list[dict] = []
+
+    for S in s_list:
+        s_ex = min(S, exact_cap)
+        t0 = time.perf_counter()
+        r_ex = risk_evaluate(inst, deploy, S=s_ex, engine="exact")
+        exact_wall = time.perf_counter() - t0
+        extrapolated = s_ex < S
+        exact_full_wall = exact_wall * (S / s_ex)
+
+        # Warm-up at the SAME S hits every (chunk-bucket, group-bucket)
+        # compile combo the timed pass will use.
+        risk_evaluate(inst, deploy, S=S, engine="pdhg")
+        t0 = time.perf_counter()
+        r_pd = risk_evaluate(inst, deploy, S=S, engine="pdhg")
+        pdhg_wall = time.perf_counter() - t0
+
+        row: dict = {
+            "size": f"{size}|S={S}", "engine": "pdhg",
+            "pdhg_wall_s": round(pdhg_wall, 4),
+            "exact_wall_s": round(exact_full_wall, 4),
+            "exact_extrapolated": extrapolated,
+            "speedup": round(exact_full_wall / max(pdhg_wall, 1e-9), 2),
+            "exp_cost": round(r_pd.expected_cost, 6),
+            "cvar95": round(r_pd.cvar["0.95"], 6),
+            "violation_rate": round(r_pd.violation_rate, 6),
+        }
+        for k in ("n_anchor0", "n_harvest_exact", "n_pdhg",
+                  "n_fallback_exact", "n_anchors"):
+            row[k] = r_pd.diagnostics.get(k, 0)
+        derived = (f"S={S};speedup={row['speedup']}x"
+                   f"{';extrap' if extrapolated else ''}")
+        if not extrapolated:
+            agree = (abs(r_pd.expected_cost - r_ex.expected_cost)
+                     / max(abs(r_ex.expected_cost), 1e-12))
+            row["agree_rel"] = float(agree)
+            derived += f";agree={agree:.2e}"
+        emit(f"risk_scaling.{size}.S={S}", pdhg_wall * 1e6 / S, derived)
+        rows.append(row)
+
+    # CVaR-vs-expected ranking under the 1.5x stress family.  On a
+    # separate instance seed: at seed 42 AGH's local search finds nothing
+    # to improve over GH (bit-identical deployments), which would make
+    # the ranking row compare a plan against itself.
+    S_rank = RANK_S["quick" if quick else ("full" if full else "std")]
+    inst_r = random_instance(*SIZE, seed=0)
+    plans = {"gh": gh(inst_r), "agh": agh(inst_r)}
+    t0 = time.perf_counter()
+    ranking = rank_deployments(inst_r, plans, S=S_rank, engine="pdhg",
+                               stress=1.5)
+    rank_wall = time.perf_counter() - t0
+    summaries = ranking["summaries"]
+    rows.append({
+        "size": f"{size}|ranking", "engine": "pdhg",
+        "rank_wall_s": round(rank_wall, 4),
+        "S": S_rank, "stress": 1.5,
+        "ranking_expected": ">".join(ranking["ranking_expected"]),
+        "ranking_cvar": ">".join(ranking["ranking_cvar"]),
+        "rank_agree": ranking["agree"],
+        **{f"{name}_cvar95": round(s["cvar_0.95"], 4)
+           for name, s in summaries.items()},
+        **{f"{name}_exp": round(s["expected_cost"], 4)
+           for name, s in summaries.items()},
+    })
+    emit(f"risk_scaling.{size}.ranking", rank_wall * 1e6,
+         f"S={S_rank};exp={rows[-1]['ranking_expected']};"
+         f"cvar={rows[-1]['ranking_cvar']};agree={ranking['agree']}")
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="small S sweep (CI smoke)")
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale sweep up to S=100k")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="dump rows as a benchmarks.run-style JSON file "
+                         "(consumed by check_regression)")
+    ap.add_argument("--trajectory-out", default=None, metavar="PATH",
+                    help="append this run's rows to the trajectory "
+                         "artifact (e.g. BENCH_allocator.json)")
+    args = ap.parse_args()
+    out_rows = run(quick=args.quick, full=args.full)
+    if args.json:
+        import json
+
+        from .common import JSON_SCHEMA_VERSION, ensure_outdir, git_sha
+        ensure_outdir(args.json)
+        with open(args.json, "w") as fh:
+            json.dump({"schema_version": JSON_SCHEMA_VERSION,
+                       "git_sha": git_sha(),
+                       "sections": {"risk_scaling": out_rows}}, fh,
+                      indent=2)
+        print(f"# wrote {args.json}", flush=True)
+    if args.trajectory_out:
+        from .trajectory import append
+        append(args.trajectory_out, out_rows, label="risk_scaling")

@@ -34,8 +34,8 @@ def main(argv=None) -> int:
     windows = 48 if args.quick else (288 if args.full else 96)
 
     from . import (allocator_scaling, extensions, failure_replay, figs,
-                   kernels_bench, serve_closed_loop, stage2_scaling, table2,
-                   table3, table4, table5, table6)
+                   kernels_bench, risk_scaling, serve_closed_loop,
+                   stage2_scaling, table2, table3, table4, table5, table6)
 
     sections = {
         "table2": lambda: table2.run(S=S, include_dm=False,
@@ -59,6 +59,8 @@ def main(argv=None) -> int:
                          else allocator_scaling.SIZES))),
         "stage2_scaling": lambda: stage2_scaling.run(
             quick=args.quick, S=(500 if args.full else 120)),
+        "risk_scaling": lambda: risk_scaling.run(quick=args.quick,
+                                                 full=args.full),
         "failure_replay": lambda: failure_replay.run(quick=args.quick),
         "serve_closed_loop": lambda: serve_closed_loop.run(quick=args.quick),
         "figs": lambda: figs.run(S=max(20, S // 4)),

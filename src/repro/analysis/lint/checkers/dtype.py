@@ -73,7 +73,7 @@ def _collect_jitted_names(tree: ast.Module) -> set[str]:
 
 @register_checker
 class DtypeChecker(BaseChecker):
-    scope = ("repro/core/xla/", "repro/kernels/")
+    scope = ("repro/core/xla/", "repro/kernels/", "repro/risk/")
     rules = (
         Rule("RPR301", "implicit-jnp-dtype",
              "jnp array construction must pin an explicit dtype"),
@@ -84,7 +84,8 @@ class DtypeChecker(BaseChecker):
     )
 
     #: RPR302 applies only here; `kernels/` compute in f32 by design.
-    _NARROW_SCOPE = ("repro/core/xla/",)
+    #: `risk/` is an f64 LP tier like the xla engine — narrowing banned.
+    _NARROW_SCOPE = ("repro/core/xla/", "repro/risk/")
 
     def check(self, ctx: FileContext) -> Iterator[Diagnostic]:
         jitted = _collect_jitted_names(ctx.tree)

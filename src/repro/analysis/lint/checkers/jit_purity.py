@@ -283,7 +283,7 @@ class _FnScanner:
 
 @register_checker
 class JitPurityChecker(BaseChecker):
-    scope = ("repro/core/xla/", "repro/kernels/")
+    scope = ("repro/core/xla/", "repro/kernels/", "repro/risk/")
     rules = (
         Rule("RPR401", "python-branch-on-tracer",
              "no Python branching on traced values in jit/pallas bodies"),

@@ -307,6 +307,25 @@ class Instance:
             lam[s] = self.lam * (1.0 + rng.uniform(-lam_pm, lam_pm, I))
         return ScenarioBatch(S=S, tau=tau, e_base=e_base, lam=lam)
 
+    def perturbed_chunks(self, rng: np.random.Generator, S: int,
+                         chunk: int = 8192,
+                         d_infl: float = 0.25, e_infl: float = 0.25,
+                         lam_pm: float = 0.20):
+        """Yield `perturbed_batch(S)` as successive `ScenarioBatch` chunks.
+
+        Draws come from the same generator in the same scenario order, so
+        concatenating the chunks is bit-identical to the one-shot
+        `perturbed_batch(rng, S)` — but peak memory is O(chunk·I·J) instead
+        of O(S·I·J), which is what lets `risk_evaluate` run S=10⁵ without a
+        ~GB e_base allocation.  Pinned in tests/test_risk.py.
+        """
+        done = 0
+        while done < S:
+            n = min(chunk, S - done)
+            yield self.perturbed_batch(rng, n, d_infl=d_infl,
+                                       e_infl=e_infl, lam_pm=lam_pm)
+            done += n
+
     def stressed(self, alpha_mult: float) -> "Instance":
         """Uniform delay+error inflation by `alpha_mult` (Fig. 3 / Fig. 5)."""
         inst = dataclasses.replace(self)

@@ -34,6 +34,7 @@ import time
 from typing import Callable, Sequence
 
 import numpy as np
+from scipy.optimize import linprog
 
 from .faults import FaultSchedule, apply_faults, evict_unavailable
 from .forecast import ewma_forecasts, relative_drift
@@ -83,6 +84,7 @@ def rolling(inst0: Instance, lam_path: np.ndarray,
             static_forecast: str = "first",
             window_h: float | None = None,
             batched: bool = True,
+            lp_reuse: bool = True,
             faults: FaultSchedule | None = None,
             fault_response: str = "repair",
             replan_drift: float | None = None) -> RollingResult:
@@ -108,6 +110,17 @@ def rolling(inst0: Instance, lam_path: np.ndarray,
     ``"static"`` (no reaction — the frozen placement rides through the
     fault, the degradation baseline).  With ``faults=None`` this function
     is byte-identical to the pre-fault fast path.
+
+    `lp_reuse` enables the affine-in-lambda re-solve skip on the batched
+    fault-free path: within a constant-deployment segment only `lam`
+    varies, so when one window's optimal basis touches no lam-scaled
+    constraint row (kv/compute/storage all slack — the segment is
+    *unsaturated*), the routing (x, u) is provably constant across the
+    segment and only the objective moves.  `_affine_segment` certifies
+    this from one exact solve + its duals and prices the remaining
+    windows by dot products; any failed certificate falls back to the
+    always-solve batch.  Pinned bit-identical to `lp_reuse=False` on the
+    replay suite (tests/test_rolling.py).
 
     `replan_drift` makes the `replan_every` cadence forecast-aware (the
     same `core.forecast.relative_drift` trigger the closed-loop serving
@@ -174,9 +187,15 @@ def rolling(inst0: Instance, lam_path: np.ndarray,
         rental_w = provisioning_cost(inst0, dep) / inst0.Delta_T * window_h
         if batched:
             system = Stage2System(inst0, dep)
-            batch = ScenarioBatch.from_lam_path(lam_path[t0:t1])
-            op, v, _ = system.solve_batch(batch, u_cap=cap)
-            viols += int(v.sum())
+            reused = (_affine_segment(system, lam_path[t0:t1], cap)
+                      if lp_reuse else None)
+            if reused is not None:
+                op, seg_viols = reused
+                viols += seg_viols
+            else:
+                batch = ScenarioBatch.from_lam_path(lam_path[t0:t1])
+                op, v, _ = system.solve_batch(batch, u_cap=cap)
+                viols += int(v.sum())
         else:
             op = np.zeros(t1 - t0)
             for t in range(t0, t1):
@@ -191,6 +210,114 @@ def rolling(inst0: Instance, lam_path: np.ndarray,
                          total_cost=float(costs.sum()),
                          violation_rate=viols / (T * inst0.I),
                          per_window_cost=costs, replans=replans)
+
+
+def _affine_segment(system: Stage2System, lam_seg: np.ndarray,
+                    cap: np.ndarray) -> tuple[np.ndarray, int] | None:
+    """Certificate-gated LP re-solve skip for one rolling segment.
+
+    Within a constant-deployment segment only `lam` varies window to
+    window; tau/e_base stay nominal.  Of the inequality families, kv,
+    compute and storage coefficients scale with lam while delay and
+    error rows (and the equality block, rhs, bounds) are lam-free.  If
+    one window's optimal basis touches NO lam-scaled row, the optimal
+    (x, u) is the same vertex for every window — only the objective
+    (affine in lam) moves — provided the certificate holds over the
+    segment's lam range:
+
+      * active inequality rows and nonzero inequality duals confined to
+        the lam-free families (delay, error) — those rows' lhs is
+        constant in lam, so they stay exactly tight at every window;
+      * per window t, reduced costs rc(lam_t) = c(lam_t) + A^T y keep
+        the basis-optimal sign pattern (A^T y is segment-constant since
+        y lives on lam-free rows), and the slack lam-scaled rows stay
+        strictly slack under lam_t (primal feasibility of the fixed x).
+
+    Certification is per window: a diurnal segment is typically
+    unsaturated off-peak and saturated at the peak, so the windows the
+    certificate covers are priced by dot products while the rest go
+    through the exact per-window solve — identical to what the
+    always-solve batch would do for them.
+
+    Returns (per-window operation costs, total violations) with the one
+    exact solve's (x, u) reused verbatim and certified windows priced
+    through `_coefficients` + the identical cost dot expression — or
+    None when the representative solve yields no usable certificate
+    (caller falls back to the always-solve batch).
+    """
+    T = lam_seg.shape[0]
+    nx, m_ub = system.nx, system.m_ub
+    if T < 2 or nx == 0:
+        return None
+    inst = system.inst
+    # Representative window through the SAME milp path the always-solve
+    # batch uses, so window 0's cost is reproduced bit-for-bit.
+    r = system.solve(lam=lam_seg[0], u_cap=cap)
+    if not r.capped_ok or r.x is None:
+        return None
+    # Duals come from linprog (milp exposes none); system.A still holds
+    # window 0's coefficients after `solve`.
+    _, c0 = system._coefficients(inst.tau, inst.e_base, lam_seg[0])
+    K = system.A.tocsr()
+    bounds = np.stack([system._lb,
+                       np.concatenate([np.ones(nx), cap])], axis=1)
+    res = linprog(c0, A_ub=K[:m_ub], b_ub=system.row_ub[:m_ub],
+                  A_eq=K[m_ub:], b_eq=np.ones(system.I),
+                  bounds=bounds, method="highs")
+    if not res.success:
+        return None
+    zfull = np.concatenate([r.x, r.u])
+    # The two HiGHS entry points must agree on the vertex — alternate
+    # optima would make the reused (x, u) ambiguous.
+    if not np.allclose(res.x, zfull, atol=1e-7):
+        return None
+
+    fam = system.row_family
+    lam_free = fam >= 3                       # delay, error
+    y_ub = -res.ineqlin.marginals             # >= 0 for A_ub x <= b_ub
+    y_eq = -res.eqlin.marginals
+    resid = res.ineqlin.residual
+    active = (np.abs(resid) < 1e-9) | (np.abs(y_ub) > 1e-9)
+    if np.any(active & ~lam_free):
+        return None
+
+    at_y = K[:m_ub].T @ y_ub + K[m_ub:].T @ y_eq
+    ub_vec = bounds[:, 1]
+    at_lb = zfull <= 1e-9
+    at_ub = zfull >= ub_vec - 1e-9
+    interior = ~(at_lb | at_ub)
+
+    # Vectorized per-window certificate over the whole segment.
+    batch = ScenarioBatch.from_lam_path(lam_seg)
+    vals_all, c_all = system.coefficient_batch(batch)
+    rc = c_all + at_y[None, :]
+    dual_ok = (np.all(rc[:, at_lb] >= -1e-9, axis=1)
+               & np.all(rc[:, at_ub] <= 1e-9, axis=1)
+               & np.all(np.abs(rc[:, interior]) <= 1e-7, axis=1))
+    rows_i = system.rows_all[:system.nnz]
+    cols_i = system.cols_all[:system.nnz]
+    lhs = np.zeros((T, m_ub))
+    np.add.at(lhs, (np.arange(T)[:, None], rows_i[None, :]),
+              vals_all[:, :system.nnz] * zfull[cols_i][None, :])
+    slack = system.row_ub[:m_ub][None, :] - lhs
+    prim_ok = np.all(slack[:, ~lam_free] > 1e-9, axis=1)
+    certified = dual_ok & prim_ok
+    certified[0] = True          # window 0 is the exact solve itself
+    if certified.sum() <= max(1, T // 4):
+        return None              # too saturated to pay off: batch-solve
+
+    op = np.empty(T)
+    viols = r.viol * int(certified.sum())
+    op[0] = r.cost
+    for t in range(1, T):
+        if certified[t]:
+            _, c_t = system._coefficients(inst.tau, inst.e_base, lam_seg[t])
+            op[t] = float(c_t[:nx] @ r.x + system.c_u @ r.u)
+        else:
+            rt = system.solve(lam=lam_seg[t], u_cap=cap)
+            op[t] = rt.cost
+            viols += rt.viol
+    return op, viols
 
 
 def _rolling_faulted(inst0: Instance, lam_path: np.ndarray, planner_obj,

@@ -41,6 +41,20 @@ from scipy.optimize import Bounds, LinearConstraint, milp
 from .instance import KB_PER_GB, T_CONV, Instance, ScenarioBatch
 from .solution import Solution, cost_terms
 
+# Optional true basis warm-start across scenarios (ROADMAP risk item):
+# scipy's HiGHS wrappers rebuild the solver per call, discarding the
+# optimal basis between scenarios.  When the `highspy` bindings are
+# installed, `solve_batch(warm_start=...)` can instead drive one
+# persistent Highs model whose basis carries over from scenario to
+# scenario.  The import is gated — this container (and CI) ships without
+# highspy, and the scipy path stays the byte-identical default.
+try:
+    import highspy
+except ImportError:            # pragma: no cover - exercised via the flag
+    highspy = None
+
+HAVE_HIGHSPY = highspy is not None
+
 
 @dataclasses.dataclass
 class _LPResult:
@@ -58,6 +72,9 @@ class Stage2System:
     Build once per deployment; `solve`/`solve_batch` refresh only the
     coefficient values from each scenario's (tau, e_base, lam).
     """
+
+    #: constraint families, in `row_family` code order (rows 0..m_ub).
+    ROW_FAMILIES = ("kv", "compute", "storage", "delay", "error")
 
     def __init__(self, inst: Instance, deploy: Solution,
                  allow_any_deployed: bool = False):
@@ -128,6 +145,16 @@ class Stage2System:
         row += int(i_has.sum())
         self.m_ub = row
 
+        # Constraint-family label per inequality row (repro.risk tail
+        # attribution): index into ROW_FAMILIES.
+        fam = np.empty(self.m_ub, dtype=np.int64)
+        fam[kv_row[kv_pair]] = 0
+        fam[g_row[pair_has]] = 1
+        fam[s_row[i_has]] = 2
+        fam[d_row[i_has]] = 3
+        fam[e_row[i_has]] = 4
+        self.row_family = fam
+
         self.ti_kv = ti[sel_kv]
         t_col = np.arange(nx)
         rows_ub = np.concatenate([
@@ -162,6 +189,15 @@ class Stage2System:
         all_rows = np.concatenate([rows_ub, eq_rows])
         all_cols = np.concatenate([cols_ub, eq_cols])
         nnz_all = all_rows.size
+        # Concat-order COO pattern, exposed for tensor engines (repro.risk):
+        # entry e of `coefficient_batch`'s value rows lives at
+        # (rows_all[e], cols_all[e]); the first `self.nnz` entries are the
+        # scenario-dependent inequality coefficients, the tail is the
+        # constant equality block (value 1.0).
+        self.rows_all = all_rows
+        self.cols_all = all_cols
+        self.nnz_all = nnz_all
+        self.m = self.m_ub + I
         coo = sparse.coo_matrix(
             (np.arange(nnz_all, dtype=float), (all_rows, all_cols)),
             shape=(self.m_ub + I, self.n))
@@ -197,6 +233,42 @@ class Stage2System:
         c[:self.nx] = (inst.Delta_T * inst.p_s * sx
                        + inst.rho[ti] * 1e3 * D_t)
         c[self.nx:] = self.c_u
+        return vals, c
+
+    def coefficient_batch(self, batch: ScenarioBatch
+                          ) -> tuple[np.ndarray, np.ndarray]:
+        """Stacked `_coefficients` over a whole batch, for tensor engines.
+
+        Returns (vals[S, nnz_all], c[S, n]): per-scenario COO values in
+        concat order (see `rows_all`/`cols_all`; the equality tail is the
+        constant 1.0) and per-scenario objective vectors.  Elementwise ops
+        match `_coefficients` exactly, so each row is bit-identical to the
+        per-scenario path — pinned in tests/test_risk.py.
+        """
+        inst, ti = self.inst, self.ti
+        S = batch.S
+        tau = (np.broadcast_to(inst.tau, (S, inst.I)) if batch.tau is None
+               else batch.tau)
+        lam = (np.broadcast_to(inst.lam, (S, inst.I)) if batch.lam is None
+               else batch.lam)
+        e_base = (np.broadcast_to(inst.e_base, (S, inst.I, inst.J))
+                  if batch.e_base is None else batch.e_base)
+        vals = np.ones((S, self.nnz_all))
+        c = np.empty((S, self.n))
+        if self.nx:
+            lam_t = lam[:, ti]
+            sx = self.sA * lam_t
+            D_t = self.dA * tau[:, ti] + self.dB
+            k0 = self.ti_kv.size
+            vals[:, :k0] = self.kvA * (lam * tau)[:, self.ti_kv]
+            vals[:, k0:k0 + self.nx] = self.gA * lam_t
+            vals[:, k0 + self.nx:k0 + 2 * self.nx] = sx
+            vals[:, k0 + 2 * self.nx:k0 + 3 * self.nx] = D_t
+            vals[:, k0 + 3 * self.nx:self.nnz] = self.eA * e_base[
+                :, ti, self.tj]
+            c[:, :self.nx] = (inst.Delta_T * inst.p_s * sx
+                              + inst.rho[ti] * 1e3 * D_t)
+        c[:, self.nx:] = self.c_u
         return vals, c
 
     def _highs(self, c: np.ndarray, cap: np.ndarray):
@@ -239,16 +311,32 @@ class Stage2System:
 
     def solve_batch(self, batch: ScenarioBatch,
                     u_cap: np.ndarray | None = None,
-                    workers: int | None = None
+                    workers: int | None = None,
+                    warm_start: bool | None = None
                     ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
         """Solve every scenario of `batch` against the fixed deployment.
 
         Returns (costs[S], viols[S], capped_ok[S]).  With `workers`, the
         scenario list is fanned out over a process pool (each worker reuses
         this system's pattern; chunked to amortize pickling).
+
+        `warm_start` requests the persistent-Highs basis warm start across
+        scenarios (sequential only; requires the optional `highspy`
+        bindings).  `None` means "use it when available and sequential";
+        `True` raises if highspy is absent — the scipy path is never
+        silently swapped out.
         """
         S = batch.S
-        if workers and workers > 1 and S >= 2 * workers:
+        if warm_start and not HAVE_HIGHSPY:
+            raise RuntimeError(
+                "warm_start=True requires the optional highspy bindings; "
+                "install highspy or pass warm_start=False/None")
+        use_pool = workers and workers > 1 and S >= 2 * workers
+        if warm_start is None:
+            warm_start = HAVE_HIGHSPY and not use_pool
+        if warm_start and not use_pool:
+            return _solve_chunk_highspy(self, batch, u_cap)
+        if use_pool:
             import concurrent.futures as cf
             import multiprocessing as mp
             chunks = np.array_split(np.arange(S), workers)
@@ -297,6 +385,82 @@ def _solve_chunk(system: Stage2System, batch: ScenarioBatch,
             lam=None if batch.lam is None else batch.lam[s],
             u_cap=u_cap)
         costs[s], viols[s], capped[s] = r.cost, r.viol, r.capped_ok
+    return costs, viols, capped
+
+
+def _solve_chunk_highspy(system: Stage2System, batch: ScenarioBatch,
+                         u_cap: np.ndarray | None
+                         ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Sequential chunk via one persistent Highs model (basis warm start).
+
+    Mirrors `_solve_chunk`'s strict-cap-then-relax protocol; only the LP
+    backend differs.  HiGHS keeps the previous optimal basis between
+    `run()` calls on the same model, so consecutive scenarios — one-factor
+    rescales of each other — typically re-optimize in a handful of dual
+    simplex iterations instead of solving from scratch.
+    """
+    if highspy is None:          # pragma: no cover - guarded by callers
+        raise RuntimeError("highspy is not installed")
+    inst = system.inst
+    cap = inst.zeta if u_cap is None else u_cap
+    S = batch.S
+    costs = np.zeros(S)
+    viols = np.zeros(S, dtype=np.int64)
+    capped = np.zeros(S, dtype=bool)
+
+    h = highspy.Highs()
+    h.setOptionValue("output_flag", False)
+    lp = highspy.HighsLp()
+    lp.num_col_ = system.n
+    lp.num_row_ = system.m
+    lp.col_cost_ = np.zeros(system.n)
+    lp.col_lower_ = system._lb.copy()
+    ub0 = np.ones(system.n)
+    ub0[system.nx:] = cap
+    lp.col_upper_ = ub0
+    lp.row_lower_ = system.row_lb.copy()
+    lp.row_upper_ = system.row_ub.copy()
+    lp.a_matrix_.format_ = highspy.MatrixFormat.kColwise
+    lp.a_matrix_.start_ = system.A.indptr.astype(np.int32)
+    lp.a_matrix_.index_ = system.A.indices.astype(np.int32)
+    lp.a_matrix_.value_ = system._vals[system._perm].copy()
+    h.passModel(lp)
+
+    col_idx = np.arange(system.n, dtype=np.int32)
+    u_idx = col_idx[system.nx:]
+    u_lb = np.zeros(system.I)
+    rows_ineq = system.rows_all[:system.nnz]
+    cols_ineq = system.cols_all[:system.nnz]
+    kOptimal = highspy.HighsModelStatus.kOptimal
+
+    def _run(c: np.ndarray, u_ub: np.ndarray) -> tuple[bool, np.ndarray]:
+        h.changeColsCost(system.n, col_idx, c)
+        h.changeColsBounds(system.I, u_idx, u_lb, u_ub)
+        h.run()
+        if h.getModelStatus() != kOptimal:
+            return False, np.zeros(system.n)
+        return True, np.array(h.getSolution().col_value)
+
+    for s in range(S):
+        vals, c = system._coefficients(
+            inst.tau if batch.tau is None else batch.tau[s],
+            inst.e_base if batch.e_base is None else batch.e_base[s],
+            inst.lam if batch.lam is None else batch.lam[s])
+        for e in range(system.nnz):
+            h.changeCoeff(int(rows_ineq[e]), int(cols_ineq[e]),
+                          float(vals[e]))
+        ok, xfull = _run(c, cap)
+        capped[s] = ok
+        if not ok:
+            ok, xfull = _run(c, np.ones(system.I))
+        if ok:
+            u = np.clip(xfull[system.nx:], 0.0, 1.0)
+            costs[s] = float(c[:system.nx] @ xfull[:system.nx]
+                             + system.c_u @ u)
+        else:
+            u = np.ones(system.I)
+            costs[s] = float(system.c_u @ u)
+        viols[s] = int(np.sum(u > 0.01))
     return costs, viols, capped
 
 

@@ -61,6 +61,14 @@ class PlanOptions:
     |                |                    | keeping facade == direct call  |
     | ``mip_rel_gap``| milp               | MIP relative-gap tolerance     |
     | ``relax``      | milp               | solve the LP relaxation        |
+    | ``risk``       | plan() post-pass   | kwargs for `repro.risk.        |
+    |                |                    | risk_evaluate` run on the      |
+    |                |                    | solved plan (e.g. {"S": 5000,  |
+    |                |                    | "engine": "pdhg"}); the report |
+    |                |                    | summary lands in               |
+    |                |                    | diagnostics["risk"].  None     |
+    |                |                    | (default) skips it — no jax    |
+    |                |                    | import, bit-identical output   |
     """
     seed: int = 0
     restarts: int | None = None
@@ -77,6 +85,7 @@ class PlanOptions:
     time_limit: float | None = None
     mip_rel_gap: float = 1e-3
     relax: bool = False
+    risk: dict | None = None
 
     def to_dict(self) -> dict:
         d = dataclasses.asdict(self)
@@ -218,8 +227,16 @@ def plan(request: PlanRequest | str | None = None, *,
     diag = dict(diag)
     if request.warm_start is not None:
         diag.setdefault("warm_started", spec.supports_warm_start)
-    return build_result(spec.name, inst, sol, wall, cpu, diag,
-                        request.options)
+    result = build_result(spec.name, inst, sol, wall, cpu, diag,
+                          request.options)
+    if request.options.risk is not None:
+        # Post-pass tail-risk evaluation of the solved plan.  Lazy
+        # import: plans without risk= never touch repro.risk (nor jax).
+        from repro.risk import risk_evaluate
+        report = risk_evaluate(inst, result.solution,
+                               **request.options.risk)
+        result.diagnostics["risk"] = report.summary()
+    return result
 
 
 def build_result(solver: str, inst: Instance, sol: Solution, wall_s: float,

@@ -1,0 +1,219 @@
+"""repro.risk — batched Stage-2 solver + CVaR evaluation contracts.
+
+The acceptance spine: the pdhg engine (anchor-basis Woodbury warm starts
++ restarted PDHG + counted exact fallback) must reproduce the exact
+HiGHS oracle per scenario to rtol 1e-5, nominal AND stressed — the
+stressed case pins the wide `_SHAPE_CLASSES` tier (15-16 active
+delay/error rows per basis), which degenerated to per-scenario exact
+solves before the shape classes existed.
+
+Also pinned here: the scenario-stream chunking bit-identity that
+`risk_evaluate` leans on (`perturbed_chunks` == one-shot
+`perturbed_batch`), the `coefficient_batch` == `_coefficients` row
+identity both engines consume, CVaR against a hand-computed value, the
+report JSON round trip, the planner `risk=` hook, and the invariant-lint
+scopes covering `src/repro/risk/`.
+"""
+import numpy as np
+import pytest
+
+from repro.core import agh, gh, random_instance
+from repro.core.instance import ScenarioBatch
+from repro.core.stage2 import HAVE_HIGHSPY, Stage2System
+from repro.risk import RiskReport, rank_deployments, risk_evaluate
+from repro.risk.api import PROTOCOL
+from repro.risk.metrics import var_cvar
+from repro.risk.solver_exact import ExactChunkSolver
+
+jax = pytest.importorskip("jax")
+from repro.risk.solver import BatchedStage2Solver  # noqa: E402
+
+RTOL = 1e-5    # the pdhg-vs-oracle acceptance contract
+
+
+@pytest.fixture(scope="module")
+def inst():
+    return random_instance(10, 8, 8, seed=7)
+
+
+@pytest.fixture(scope="module")
+def deploy(inst):
+    return gh(inst)
+
+
+def _batch(inst, S, seed=None):
+    rng = np.random.default_rng(PROTOCOL["seed"] if seed is None else seed)
+    return inst.perturbed_batch(rng, S, d_infl=PROTOCOL["d_infl"],
+                                e_infl=PROTOCOL["e_infl"],
+                                lam_pm=PROTOCOL["lam_pm"])
+
+
+# -- pdhg engine vs the exact oracle ------------------------------------
+
+def test_pdhg_matches_oracle_per_scenario(inst, deploy):
+    S = 300
+    batch = _batch(inst, S)
+    system = Stage2System(inst, deploy)
+    out_pd = BatchedStage2Solver(system).solve_scenarios(batch)
+    out_ex = ExactChunkSolver(system).solve_scenarios(batch)
+    np.testing.assert_allclose(out_pd.costs, out_ex.costs, rtol=RTOL)
+
+
+def test_pdhg_matches_oracle_stressed_wide_bases():
+    """1.5x stress activates 15-16 delay/error rows per optimal basis —
+    only representable through the wide (q, eg) shape class.  Before the
+    shape classes every anchor was rejected and the whole batch fell to
+    per-scenario exact solves; anchors > 0 pins the fix."""
+    big = random_instance(20, 20, 20, seed=42)
+    sinst = big.stressed(1.5)
+    dep = agh(big)
+    S = 160
+    batch = _batch(sinst, S)
+    system = Stage2System(sinst, dep)
+    solver = BatchedStage2Solver(system)
+    out_pd = solver.solve_scenarios(batch)
+    out_ex = ExactChunkSolver(system).solve_scenarios(batch)
+    np.testing.assert_allclose(out_pd.costs, out_ex.costs, rtol=RTOL)
+    assert len(solver.anchors) > 0
+    assert solver.diagnostics["n_anchor0"] > 0
+
+
+def test_forced_pdhg_path_and_diagnostics_accounting(inst, deploy):
+    """max_anchors=0 freezes the anchor set at the seed anchor, forcing
+    every miss through restarted PDHG (phase 2) — and every scenario must
+    be accounted for in exactly one diagnostics bucket."""
+    S = 120
+    batch = _batch(inst, S, seed=5)
+    solver = BatchedStage2Solver(Stage2System(inst, deploy), max_anchors=0)
+    out = solver.solve_scenarios(batch)
+    d = solver.diagnostics
+    assert d["n_scenarios"] == S
+    assert (d["n_anchor0"] + d["n_harvest_exact"] + d["n_pdhg"]
+            + d["n_fallback_exact"]) == S
+    assert d["n_pdhg"] + d["n_fallback_exact"] > 0
+    out_ex = ExactChunkSolver(Stage2System(inst, deploy)) \
+        .solve_scenarios(batch)
+    np.testing.assert_allclose(out.costs, out_ex.costs, rtol=RTOL)
+
+
+# -- metrics ------------------------------------------------------------
+
+def test_cvar_hand_computed():
+    """Rockafellar-Uryasev on costs 0..99 at alpha=0.9: VaR = 89.1 (the
+    interpolated 0.9-quantile), tail excess sum_{c=90..99}(c - 89.1) = 54
+    => CVaR = 89.1 + 0.54/0.1 = 94.5."""
+    costs = np.arange(100, dtype=float)
+    var, cvar = var_cvar(costs, 0.90)
+    assert var == pytest.approx(89.1)
+    assert cvar == pytest.approx(94.5)
+    # Coherence: CVaR dominates VaR dominates the mean, monotone in alpha.
+    assert cvar >= var >= costs.mean()
+    assert var_cvar(costs, 0.95)[1] >= cvar
+
+
+# -- report / api -------------------------------------------------------
+
+def test_risk_report_json_round_trip(inst, deploy):
+    r = risk_evaluate(inst, deploy, S=64, engine="exact")
+    r2 = RiskReport.from_json(r.to_json())
+    assert r2.to_dict() == r.to_dict()
+    s = r.summary()
+    assert s["expected_cost"] == r.expected_cost
+    assert s["cvar_0.95"] == r.cvar["0.95"]
+
+
+def test_risk_evaluate_chunking_invariant(inst, deploy):
+    """Chunk size is an implementation detail: same S, different chunk
+    => bit-identical statistics (scenario stream + per-scenario solves
+    are both chunk-invariant)."""
+    r1 = risk_evaluate(inst, deploy, S=96, engine="exact", chunk=96)
+    r2 = risk_evaluate(inst, deploy, S=96, engine="exact", chunk=32)
+    assert r1.expected_cost == r2.expected_cost
+    assert r1.cvar == r2.cvar
+    assert r1.viol_quantiles == r2.viol_quantiles
+
+
+def test_risk_evaluate_rejects_unknown_engine(inst, deploy):
+    with pytest.raises(ValueError, match="unknown engine"):
+        risk_evaluate(inst, deploy, S=8, engine="simplex")
+
+
+def test_rank_deployments_stress_orderings(inst, deploy):
+    plans = {"gh": deploy, "agh": agh(inst)}
+    rk = rank_deployments(inst, plans, S=48, engine="exact", stress=1.5)
+    assert sorted(rk["ranking_expected"]) == sorted(plans)
+    assert sorted(rk["ranking_cvar"]) == sorted(plans)
+    assert rk["agree"] == (rk["ranking_expected"] == rk["ranking_cvar"])
+    assert set(rk["summaries"]) == set(plans)
+    reports = rk["reports"]
+    e = [reports[k].expected_cost for k in rk["ranking_expected"]]
+    assert e == sorted(e)
+    cv = [reports[k].cvar["0.95"] for k in rk["ranking_cvar"]]
+    assert cv == sorted(cv)
+
+
+def test_planner_risk_hook(inst):
+    from repro.planner import PlanOptions, plan
+    res = plan("gh", instance=inst,
+               options=PlanOptions(risk={"S": 32, "engine": "exact"}))
+    row = res.diagnostics["risk"]
+    assert row["S"] == 32 and row["engine"] == "exact"
+    assert row["expected_cost"] > 0
+    base = plan("gh", instance=inst)
+    assert "risk" not in base.diagnostics
+    assert base.objective == res.objective
+
+
+# -- chunking / coefficient bit-identities ------------------------------
+
+def test_perturbed_chunks_bit_identical_to_one_shot(inst):
+    """Satellite (c): chunked scenario generation == one-shot at large S,
+    bit for bit, including across chunk boundaries."""
+    S, chunk = 10_000, 4096
+    kw = dict(d_infl=PROTOCOL["d_infl"], e_infl=PROTOCOL["e_infl"],
+              lam_pm=PROTOCOL["lam_pm"])
+    one = inst.perturbed_batch(np.random.default_rng(9), S, **kw)
+    parts = list(inst.perturbed_chunks(np.random.default_rng(9), S,
+                                       chunk=chunk, **kw))
+    assert [p.S for p in parts] == [4096, 4096, 1808]
+    for field in ("tau", "e_base", "lam"):
+        cat = np.concatenate([getattr(p, field) for p in parts])
+        assert np.array_equal(cat, getattr(one, field))
+    # The row right AFTER a chunk boundary is the one-shot row `chunk`.
+    assert np.array_equal(parts[1].tau[0], one.tau[chunk])
+    assert np.array_equal(parts[1].e_base[0], one.e_base[chunk])
+    assert np.array_equal(parts[1].lam[0], one.lam[chunk])
+
+
+def test_coefficient_batch_bit_identical_to_scalar(inst, deploy):
+    batch = _batch(inst, 16, seed=11)
+    system = Stage2System(inst, deploy)
+    vals, c = system.coefficient_batch(batch)
+    for s in range(batch.S):
+        v1, c1 = system._coefficients(batch.tau[s], batch.e_base[s],
+                                      batch.lam[s])
+        assert np.array_equal(vals[s, :system.nnz], v1)
+        assert np.array_equal(c[s], c1)
+    # The equality tail is the constant 1.0 in every scenario.
+    assert np.array_equal(vals[:, system.nnz:],
+                          np.ones((batch.S, system.nnz_all - system.nnz)))
+
+
+# -- satellites: highspy gate, lint scopes ------------------------------
+
+@pytest.mark.skipif(HAVE_HIGHSPY,
+                    reason="highspy installed: warm start is available")
+def test_warm_start_requires_highspy(inst, deploy):
+    system = Stage2System(inst, deploy)
+    with pytest.raises(RuntimeError, match="highspy"):
+        system.solve_batch(ScenarioBatch(S=2), warm_start=True)
+
+
+def test_lint_scopes_cover_risk_subsystem():
+    """src/repro/risk/ is an f64 LP tier like the xla engine: the dtype
+    narrowing ban and the jit-purity checker must both scope it."""
+    from repro.analysis.lint.checkers.dtype import DtypeChecker
+    from repro.analysis.lint.checkers.jit_purity import JitPurityChecker
+    assert "repro/risk/" in DtypeChecker.scope
+    assert "repro/risk/" in JitPurityChecker.scope
+    assert "repro/risk/" in DtypeChecker._NARROW_SCOPE
